@@ -1,0 +1,134 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+    compute term    = HLO_dot_FLOPs_global / (chips x 197e12 FLOP/s)
+    memory term     = HBM_traffic_global   / (chips x 819e9 B/s)
+    collective term = collective_bytes_per_device / 50e9 B/s/link
+plus dominant term, MODEL_FLOPS = 6*N_active*D, usefulness ratio, and a
+one-line lever. HLO quantities are parsed from the compiled SPMD module
+with loop trip counts folded in (see launch/dryrun.py).
+
+Convention notes (documented in EXPERIMENTS.md):
+  * dot FLOPs are per-device sums x chips — symmetric SPMD makes this the
+    global count; it EXCLUDES elementwise flops (negligible next to dots).
+  * HBM traffic counts result bytes of top-level (non-fused) ops — fusion
+    internals stay in VMEM/registers. An approximation; used for term
+    comparison, not absolute bandwidth claims.
+  * collective term uses per-device payload bytes over one 50 GB/s link —
+    the pessimistic single-link view (no axis-parallel link overlap).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link (ICI)
+CHIPS = {"single": 256, "multi": 512}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+_LEVERS = {
+    "compute": "raise per-chip utilization: larger microbatch or fewer remat recomputes",
+    "memory": "cut HBM reads: fuse attention (flash kernel), wider tiles, bf16 buffers",
+    "collective": "shrink payloads: overlap FSDP all-gathers with compute, gradient compression, TP-block fusion",
+}
+
+
+def tokens_of(shape_name: str, rec: dict) -> int:
+    from repro.configs import SHAPES
+
+    s = SHAPES[shape_name]
+    if rec.get("kind") == "decode":
+        return s.global_batch  # one token per sequence
+    return s.global_batch * s.seq_len
+
+
+def analyze_record(rec: dict[str, Any]) -> dict[str, Any] | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = CHIPS[rec["mesh"]]
+    flops_global = rec.get("dot_flops_per_device", 0) * chips
+    hbm_global = rec.get("hbm_traffic_per_device", 0) * chips
+    coll_dev = rec.get("collectives", {}).get("total_bytes", 0)
+    t_compute = flops_global / (chips * PEAK_FLOPS)
+    t_memory = hbm_global / (chips * HBM_BW)
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    d_tokens = tokens_of(rec["shape"], rec)
+    n_active = rec.get("active_params", rec.get("params", 0))
+    model_flops = 6 * n_active * d_tokens
+    if rec.get("kind") in ("prefill", "decode"):
+        model_flops = 2 * n_active * d_tokens  # forward only
+    useful = model_flops / flops_global if flops_global else 0.0
+    bound = max(terms.values())
+    roofline_frac = (flops_global / (chips * PEAK_FLOPS)) / bound if bound else 0.0
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": flops_global,
+        "useful_ratio": useful,
+        "roofline_fraction": roofline_frac,
+        "lever": _LEVERS[dominant],
+        "microbatches": rec.get("microbatches"),
+    }
+
+
+def load_all(results_dir: str | None = None, mesh: str = "single") -> list[dict]:
+    d = os.path.abspath(results_dir or RESULTS_DIR)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json") or f"__{mesh}" not in name:
+            continue
+        with open(os.path.join(d, name)) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def run(quick=True) -> list[tuple[str, float, str]]:
+    rows = []
+    for a in load_all():
+        rows.append((
+            f"roofline_{a['arch']}_{a['shape']}",
+            a["roofline_fraction"],
+            f"dom={a['dominant']} tc={a['t_compute_s']:.2e}s tm={a['t_memory_s']:.2e}s "
+            f"tx={a['t_collective_s']:.2e}s useful={a['useful_ratio']:.2f}",
+        ))
+    if not rows:
+        rows.append(("roofline_missing", 0.0, "run: python -m repro.launch.dryrun --all"))
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = load_all(mesh=mesh)
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | dominant | "
+           "MODEL_FLOPS | HLO_FLOPs | useful | roofline frac | lever |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for a in rows:
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} "
+            f"| {a['t_collective_s']:.3e} | **{a['dominant']}** | {a['model_flops']:.2e} "
+            f"| {a['hlo_flops']:.2e} | {a['useful_ratio']:.2f} | {a['roofline_fraction']:.2f} "
+            f"| {a['lever']} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

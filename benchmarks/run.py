@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,value,derived`` CSV rows:
+  bench_visits      — Fig 7/8: % of K visited (NMFk + K-Means, 4 variants)
+  bench_kmeans_rmse — §IV-A RMSE-of-recovered-k table
+  bench_distributed — Fig 9: distributed NMF/RESCAL visit % + modeled runtime
+  bench_chunking    — Table II: T1-T4 strategy ablation
+  bench_kernels     — Pallas kernel parity + tile economics
+  bench_roofline    — §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="full-scale (slow) settings")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (
+        bench_chunking,
+        bench_distributed,
+        bench_kernels,
+        bench_kmeans_rmse,
+        bench_roofline,
+        bench_visits,
+    )
+
+    benches = {
+        "chunking": bench_chunking.run,
+        "kernels": bench_kernels.run,
+        "kmeans_rmse": bench_kmeans_rmse.run,
+        "distributed": bench_distributed.run,
+        "visits": bench_visits.run,
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,value,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            for row_name, value, derived in fn(quick=quick):
+                print(f"{row_name},{value:.4f},{derived}")
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name},nan,ERROR {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

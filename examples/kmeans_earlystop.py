@@ -1,0 +1,37 @@
+"""K-Means + Davies-Bouldin minimization with Early Stop (paper §IV-A).
+
+The K-Means experiment from the paper: Gaussian blobs (std 0.5 + noise),
+DB index as the score (LOWER is better -> minimization mode), Early Stop
+pruning the upper k range once the score blows past the stop bound.
+
+    PYTHONPATH=src python examples/kmeans_earlystop.py
+"""
+import jax
+
+from repro.core import binary_bleed_search
+from repro.core.scoring import davies_bouldin_score
+from repro.factorization import blob_data, kmeans
+
+key = jax.random.PRNGKey(1)
+x, _ = blob_data(key, n=300, d=6, k_true=7, std=0.5, spread=8.0)
+
+
+def evaluate(k: int, should_abort=None) -> float:
+    res = kmeans(x, int(k), jax.random.fold_in(key, k))
+    return float(davies_bouldin_score(x, res.labels, int(k)))
+
+
+result = binary_bleed_search(
+    evaluate,
+    k_range=(2, 24),
+    select_threshold=0.6,   # DB <= 0.6 selects (good separation)
+    stop_threshold=1.6,     # DB >= 1.6 can never recover -> prune upward
+    mode="minimize",
+    num_resources=2,
+)
+print(f"k_optimal={result.k_optimal} (true 7), visited "
+      f"{result.n_visited}/{result.n_candidates} k values: {sorted(result.visited_ks)}")
+for v in sorted(result.visits, key=lambda v: v.k):
+    print(f"  k={v.k:2d} DB={v.score:.3f}"
+          + ("  <- selects" if v.pruned_lower else "")
+          + ("  <- stops" if v.pruned_upper else ""))

@@ -1,0 +1,9 @@
+"""repro — Binary Bleed (LANL, CS.DC 2024) as a production JAX framework.
+
+Public API:
+    repro.core           — the paper's algorithms (search, schedule, score)
+    repro.factorization  — NMF/NMFk/K-Means/RESCAL (+ distributed)
+    repro.models         — the 10 assigned LM architectures
+    repro.launch         — mesh / dryrun / train / serve / ksearch drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from .checkpointer import AsyncCheckpointer, latest_step, prune_old, restore, save  # noqa: F401

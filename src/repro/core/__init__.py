@@ -1,0 +1,26 @@
+"""Binary Bleed core: the paper's contribution as a composable library."""
+from .api import (  # noqa: F401
+    Mode,
+    ScheduleTrace,
+    SearchResult,
+    SearchSpace,
+    SimulatedScheduler,
+    ThreadPoolScheduler,
+    binary_bleed_recursive,
+    binary_bleed_search,
+    binary_bleed_worklist,
+    grid_search,
+    make_space,
+    standard_search,
+)
+from .chunking import chunk_block, chunk_skip_mod, plan_worklists, rebalance  # noqa: F401
+from .coordinator import Bounds, FileCoordinator, InProcessCoordinator  # noqa: F401
+from .scheduler import ResourceEvent  # noqa: F401
+from .scoring import (  # noqa: F401
+    davies_bouldin_score,
+    laplacian_score,
+    pairwise_sq_dists,
+    silhouette_score,
+    square_wave_score,
+)
+from .traversal import traversal_sort  # noqa: F401

@@ -1,0 +1,92 @@
+"""Public Binary Bleed API.
+
+    from repro.core import binary_bleed_search, SearchSpace, Mode
+
+    result = binary_bleed_search(
+        evaluate=lambda k: my_model_score(k),
+        k_range=(2, 30),
+        select_threshold=0.7,
+        stop_threshold=0.2,          # optional Early Stop (§III-C)
+        mode="maximize",
+        num_resources=4,             # 1 = serial Algorithm 1
+        order="pre",
+    )
+    result.k_optimal, result.visit_fraction
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .bleed import binary_bleed_recursive, binary_bleed_worklist, standard_search
+from .scheduler import ScheduleTrace, SimulatedScheduler, ThreadPoolScheduler
+from .search_space import Mode, SearchResult, SearchSpace
+from .traversal import Order
+
+
+def make_space(
+    k_range: tuple[int, int] | Sequence[int],
+    select_threshold: float,
+    stop_threshold: float | None = None,
+    mode: str | Mode = Mode.MAXIMIZE,
+) -> SearchSpace:
+    mode = Mode(mode)
+    if isinstance(k_range, tuple) and len(k_range) == 2 and isinstance(k_range[0], int):
+        ks = tuple(range(k_range[0], k_range[1] + 1))
+    else:
+        ks = tuple(sorted(set(int(k) for k in k_range)))
+    return SearchSpace(ks, select_threshold, stop_threshold, mode)
+
+
+def binary_bleed_search(
+    evaluate: Callable[..., float],
+    k_range: tuple[int, int] | Sequence[int],
+    select_threshold: float,
+    stop_threshold: float | None = None,
+    mode: str | Mode = Mode.MAXIMIZE,
+    num_resources: int = 1,
+    order: Order = "pre",
+    strategy: str = "T4",
+    executor: str = "threads",
+) -> SearchResult:
+    """Run Binary Bleed over k_range; returns SearchResult.
+
+    ``num_resources == 1`` runs the serial Algorithm 1 (worklist form).
+    Otherwise resources execute concurrently (``executor="threads"``) or
+    deterministically in simulation (``executor="simulate"`` — used by
+    benchmarks; evaluation still happens exactly once per visited k).
+    """
+    space = make_space(k_range, select_threshold, stop_threshold, mode)
+    if num_resources <= 1:
+        return binary_bleed_worklist(space, evaluate, order=order)
+    if executor == "threads":
+        return ThreadPoolScheduler(space, num_resources, order, strategy).run(evaluate)
+    if executor == "simulate":
+        trace = SimulatedScheduler(space, num_resources, order, strategy).run(evaluate)
+        return trace.to_result()
+    raise ValueError(f"unknown executor {executor!r}")
+
+
+def grid_search(
+    evaluate: Callable[[int], float],
+    k_range: tuple[int, int] | Sequence[int],
+    select_threshold: float,
+    mode: str | Mode = Mode.MAXIMIZE,
+) -> SearchResult:
+    """The paper's Standard baseline (visits 100% of K)."""
+    return standard_search(make_space(k_range, select_threshold, None, mode), evaluate)
+
+
+__all__ = [
+    "binary_bleed_search",
+    "grid_search",
+    "make_space",
+    "binary_bleed_recursive",
+    "binary_bleed_worklist",
+    "standard_search",
+    "SimulatedScheduler",
+    "ThreadPoolScheduler",
+    "ScheduleTrace",
+    "SearchSpace",
+    "SearchResult",
+    "Mode",
+]

@@ -1,0 +1,166 @@
+"""Binary Bleed k-search, single rank & thread (paper Algorithm 1 + §III-C).
+
+Two equivalent forms are provided:
+
+  * ``binary_bleed_recursive`` — the paper's Algorithm 1, faithful recursive
+    structure over index intervals ``[lo, hi)``: evaluate the midpoint, update
+    the prune bounds on threshold crossings, recurse into both halves
+    ("bleed") skipping any subtree whose k interval is fully pruned.
+
+  * ``binary_bleed_worklist`` — iterative: walk the traversal-sorted k list
+    (pre-order = same visit schedule as the recursion) and skip pruned
+    entries. This is the form the multi-resource scheduler generalizes, and
+    is restart-safe (the worklist position + bounds are the whole state).
+
+Pruning state (the paper's ``k_min`` / ``k_max`` / ``ranks_seen``):
+
+  * ``lo_bound``: highest k whose score crossed the *select* threshold T.
+    Every unvisited k <= lo_bound is pruned — the objective
+    ``k_opt = max{k : S(f(k)) ≥ T}`` cannot live there. (Vanilla)
+  * ``hi_bound``: lowest k whose score crossed the *stop* threshold U.
+    Every unvisited k >= hi_bound is pruned — domain knowledge says scores
+    never recover past U. (Early Stop, §III-C)
+
+A k is evaluated iff ``lo_bound < k < hi_bound``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+from .search_space import Mode, SearchResult, SearchSpace, VisitRecord
+from .traversal import Order, traversal_sort
+
+# evaluate(k) -> score. Long-running fits may additionally accept an
+# ``should_abort`` kwarg (checked between fit chunks, §III-D) — the serial
+# driver never aborts, the scheduler wires it to live prune state.
+EvalFn = Callable[[int], float]
+
+
+class BleedState:
+    """Mutable prune state shared by all Binary Bleed drivers."""
+
+    __slots__ = ("space", "lo_bound", "hi_bound", "k_optimal", "visits", "_order_ctr")
+
+    def __init__(self, space: SearchSpace):
+        self.space = space
+        self.lo_bound = -math.inf  # ks <= lo_bound are pruned (select crossings)
+        self.hi_bound = math.inf  # ks >= hi_bound are pruned (stop crossings)
+        self.k_optimal: int | None = None
+        self.visits: list[VisitRecord] = []
+        self._order_ctr = 0
+
+    # -- queries ---------------------------------------------------------------
+    def should_visit(self, k: int) -> bool:
+        return self.lo_bound < k < self.hi_bound
+
+    def interval_alive(self, k_lo: int, k_hi: int) -> bool:
+        """Does [k_lo, k_hi] (k values) intersect the open live interval?"""
+        return k_hi > self.lo_bound and k_lo < self.hi_bound
+
+    # -- updates ---------------------------------------------------------------
+    def record(self, k: int, score: float, resource: int = 0) -> VisitRecord:
+        """Append to ranks_seen and fold the score into the prune bounds."""
+        rec = VisitRecord(k=k, score=score, resource=resource, wall_order=self._order_ctr)
+        self._order_ctr += 1
+        if self.space.selects(score):
+            rec.pruned_lower = True
+            if k > self.lo_bound:
+                self.lo_bound = k
+            if self.k_optimal is None or k > self.k_optimal:
+                self.k_optimal = k
+        if self.space.stops(score):
+            rec.pruned_upper = True
+            if k < self.hi_bound:
+                self.hi_bound = k
+        self.visits.append(rec)
+        return rec
+
+    def merge_bounds(self, lo_bound: float, hi_bound: float, k_optimal: int | None) -> None:
+        """Fold prune bounds published by another resource (Alg 3/4 receive)."""
+        self.lo_bound = max(self.lo_bound, lo_bound)
+        self.hi_bound = min(self.hi_bound, hi_bound)
+        if k_optimal is not None and (self.k_optimal is None or k_optimal > self.k_optimal):
+            self.k_optimal = k_optimal
+
+    def result(self) -> SearchResult:
+        return SearchResult(
+            k_optimal=self.k_optimal,
+            visits=list(self.visits),
+            n_candidates=len(self.space.ks),
+        )
+
+
+def binary_bleed_recursive(
+    space: SearchSpace,
+    evaluate: EvalFn,
+    bleed_up_first: bool = True,
+) -> SearchResult:
+    """Paper Algorithm 1 — recursive Binary Bleed over ``space.ks``.
+
+    ``bleed_up_first=True`` recurses into the upper half before the lower
+    half (Alg 1 lines 16-19): for the max-k objective, finding a higher
+    selecting k first prunes more of the lower half.
+    """
+    ks = space.ks
+    state = BleedState(space)
+
+    def search(lo: int, hi: int) -> None:  # [lo, hi) index interval
+        if lo >= hi:
+            return
+        # subtree prune: whole k interval outside live bounds (Alg 1 l.16/18)
+        if not state.interval_alive(ks[lo], ks[hi - 1]):
+            return
+        mid = lo + (hi - lo) // 2
+        k_mid = ks[mid]
+        if state.should_visit(k_mid):  # Alg 1 line 7
+            state.record(k_mid, evaluate(k_mid))  # lines 8-15
+        halves = ((mid + 1, hi), (lo, mid)) if bleed_up_first else ((lo, mid), (mid + 1, hi))
+        for a, b in halves:  # lines 16-19: bleed into both directions
+            search(a, b)
+
+    # Python recursion depth is log2(|K|) — fine for any practical K, but we
+    # guard absurd sizes by falling back to the worklist form.
+    if len(ks) > 1 << 20:
+        return binary_bleed_worklist(space, evaluate, order="pre")
+    search(0, len(ks))
+    return state.result()
+
+
+def binary_bleed_worklist(
+    space: SearchSpace,
+    evaluate: EvalFn,
+    order: Order = "pre",
+    worklist: Sequence[int] | None = None,
+    state: BleedState | None = None,
+) -> SearchResult:
+    """Iterative Binary Bleed: visit `worklist` (default: traversal-sorted
+    ks), skipping pruned entries. With ``order="pre"`` this evaluates the
+    same midpoints as the recursion; ``order="in"`` degrades to the naive
+    linear grid search (the paper's Standard baseline).
+
+    Passing an external ``state`` lets callers resume a checkpointed search
+    or share bounds across resources (the scheduler does both).
+    """
+    if worklist is None:
+        worklist = traversal_sort(sorted(space.ks), order)
+    state = state if state is not None else BleedState(space)
+    for k in worklist:
+        if not state.should_visit(k):
+            continue
+        state.record(k, evaluate(k))
+    return state.result()
+
+
+def standard_search(space: SearchSpace, evaluate: EvalFn) -> SearchResult:
+    """The paper's Standard baseline: exhaustive ascending grid search.
+
+    Visits 100% of K and picks k_opt = max{k : S(f(k)) crosses T}.
+    """
+    state = BleedState(space)
+    for k in space.ks:
+        state.record(k, evaluate(k))
+        # Standard never prunes: reset bounds so every k is visited.
+        state.lo_bound = -math.inf
+        state.hi_bound = math.inf
+    return state.result()

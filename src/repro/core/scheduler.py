@@ -1,0 +1,346 @@
+"""Multi-resource Binary Bleed scheduler (paper Algorithms 3 & 4).
+
+Two executors over the same plan (Alg 2 chunking + traversal sort, T4):
+
+  * ``SimulatedScheduler`` — a deterministic discrete-event simulator used
+    by the reproduction benchmarks (Figs 2-6 operation dynamics, Fig 7/8
+    visit percentages, Fig 9 distributed runtimes). Each "resource" is a
+    mesh slice / MPI rank / thread; fit durations come from a user model
+    (e.g. measured per-k NMF times). Broadcast of prune bounds is
+    instantaneous on completion, matching the paper's implementation where
+    in-flight fits are NOT aborted by default ("the implementation shown
+    does not prune k values after the model begins execution", Fig 4) —
+    optional ``abort_in_flight`` enables §III-D early termination.
+
+  * ``ThreadPoolScheduler`` — real concurrency: one worker per resource
+    walking its worklist, sharing bounds through a Coordinator
+    (InProcess for threads, File for multi-host). Supports straggler
+    speculation and elastic re-chunking on resource failure.
+
+Fault-tolerance model: k evaluations are pure/idempotent (a model fit at a
+given k with fixed seed), so (a) duplicated work is safe — first finisher
+wins; (b) a dead resource's unvisited chunk can be re-dealt (Alg 2) over
+the survivors; (c) the journal makes restarts exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+from typing import Callable, Sequence
+
+from .bleed import BleedState
+from .chunking import plan_worklists, rebalance
+from .coordinator import Bounds, InProcessCoordinator
+from .search_space import SearchResult, SearchSpace, VisitRecord
+from .traversal import Order
+
+EvalFn = Callable[[int], float]
+DurationFn = Callable[[int], float]
+
+
+@dataclasses.dataclass
+class SimVisit:
+    k: int
+    score: float
+    resource: int
+    t_start: float
+    t_end: float
+    aborted: bool = False  # started, then pruned mid-flight (§III-D)
+
+
+@dataclasses.dataclass
+class ScheduleTrace:
+    """Full account of a simulated run — the benchmark's ground truth."""
+
+    k_optimal: int | None
+    visits: list[SimVisit]  # completed evaluations (cost incurred)
+    aborted: list[SimVisit]  # partial evaluations (cost partially incurred)
+    skipped: list[int]  # pruned before starting (cost saved)
+    makespan: float
+    n_candidates: int
+    busy_time: float  # sum of evaluation time across resources
+    num_resources: int
+
+    @property
+    def n_visited(self) -> int:
+        return len(self.visits) + len(self.aborted)
+
+    @property
+    def visit_fraction(self) -> float:
+        return self.n_visited / max(1, self.n_candidates)
+
+    def to_result(self) -> SearchResult:
+        recs = [
+            VisitRecord(k=v.k, score=v.score, resource=v.resource, wall_order=i)
+            for i, v in enumerate(sorted(self.visits, key=lambda v: v.t_end))
+        ]
+        return SearchResult(self.k_optimal, recs, self.n_candidates)
+
+
+@dataclasses.dataclass
+class ResourceEvent:
+    """Elasticity event: at time t, resource `rid` fails or a new one joins."""
+
+    t: float
+    kind: str  # "fail" | "join"
+    rid: int
+
+
+class SimulatedScheduler:
+    """Deterministic discrete-event execution of multi-resource Binary Bleed."""
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        num_resources: int,
+        order: Order = "pre",
+        strategy: str = "T4",
+        duration_fn: DurationFn | None = None,
+        abort_in_flight: bool = False,
+        speculate_stragglers: bool = False,
+        events: Sequence[ResourceEvent] = (),
+    ):
+        self.space = space
+        self.num_resources = num_resources
+        self.order = order
+        self.strategy = strategy
+        self.duration_fn = duration_fn or (lambda k: 1.0)
+        self.abort_in_flight = abort_in_flight
+        self.speculate = speculate_stragglers
+        self.events = sorted(events, key=lambda e: e.t)
+
+    def run(self, evaluate: EvalFn) -> ScheduleTrace:
+        state = BleedState(self.space)
+        worklists = plan_worklists(self.space.ks, self.num_resources, self.order, self.strategy)
+        queues: dict[int, list[int]] = {r: list(w) for r, w in enumerate(worklists)}
+        alive: set[int] = set(queues)
+        running: dict[int, tuple[int, float, float]] = {}  # rid -> (k, t_start, t_end)
+        in_flight_ks: dict[int, list[int]] = {}  # k -> [rids] (speculation dups)
+        visits: list[SimVisit] = []
+        aborted: list[SimVisit] = []
+        skipped: list[int] = []
+        busy = 0.0
+        now = 0.0
+        next_rid = self.num_resources
+        ev_i = 0
+        started: set[int] = set()  # ks whose evaluation ever started
+        scores: dict[int, float] = {}
+
+        def pop_next(rid: int) -> int | None:
+            q = queues.get(rid, [])
+            while q:
+                k = q.pop(0)
+                if k in started:
+                    continue
+                if state.should_visit(k):
+                    return k
+                skipped.append(k)
+            return None
+
+        def dispatch(rid: int) -> None:
+            if rid in running or rid not in alive:
+                return
+            k = pop_next(rid)
+            if k is None and self.speculate:
+                # straggler speculation: duplicate the in-flight k that will
+                # finish last (idempotent fits; first finisher wins).
+                cands = [
+                    (t_end, kk)
+                    for r2, (kk, _, t_end) in running.items()
+                    if r2 != rid and state.should_visit(kk)
+                ]
+                if cands:
+                    _, kk = max(cands)
+                    dur = self.duration_fn(kk)
+                    running[rid] = (kk, now, now + dur)
+                    in_flight_ks.setdefault(kk, []).append(rid)
+                    return
+            if k is not None:
+                dur = self.duration_fn(k)
+                started.add(k)
+                running[rid] = (k, now, now + dur)
+                in_flight_ks.setdefault(k, []).append(rid)
+
+        def handle_events_until(t: float) -> None:
+            nonlocal ev_i, next_rid
+            while ev_i < len(self.events) and self.events[ev_i].t <= t:
+                ev = self.events[ev_i]
+                ev_i += 1
+                if ev.kind == "fail" and ev.rid in alive:
+                    alive.discard(ev.rid)
+                    # in-flight work lost: the k never completed, re-queue it
+                    if ev.rid in running:
+                        k, t_s, _ = running.pop(ev.rid)
+                        in_flight_ks.get(k, []) and in_flight_ks[k].remove(ev.rid)
+                        if not in_flight_ks.get(k):
+                            started.discard(k)  # nobody else running it -> redo
+                    # elastic re-chunk: pool unvisited ks over survivors (Alg 2)
+                    pool = sorted(
+                        {k for q in queues.values() for k in q if k not in started}
+                    )
+                    survivors = sorted(alive)
+                    if survivors and pool:
+                        new_lists = rebalance(pool, len(survivors), self.order)
+                        for q in queues.values():
+                            q.clear()
+                        for r2, wl in zip(survivors, new_lists):
+                            queues[r2] = list(wl)
+                elif ev.kind == "join":
+                    rid = next_rid
+                    next_rid += 1
+                    alive.add(rid)
+                    queues[rid] = []
+                    pool = sorted(
+                        {k for q in queues.values() for k in q if k not in started}
+                    )
+                    survivors = sorted(alive)
+                    if pool:
+                        new_lists = rebalance(pool, len(survivors), self.order)
+                        for q in queues.values():
+                            q.clear()
+                        for r2, wl in zip(survivors, new_lists):
+                            queues[r2] = list(wl)
+
+        handle_events_until(0.0)
+        for rid in sorted(alive):
+            dispatch(rid)
+
+        while running:
+            # advance to the earliest completion (or event)
+            t_next = min(t_end for (_, _, t_end) in running.values())
+            if ev_i < len(self.events) and self.events[ev_i].t < t_next:
+                now = self.events[ev_i].t
+                handle_events_until(now)
+                for rid in sorted(alive):
+                    dispatch(rid)
+                continue
+            now = t_next
+            done = sorted(rid for rid, (_, _, te) in running.items() if te <= now)
+            for rid in done:
+                k, t_s, t_e = running.pop(rid)
+                dup_list = in_flight_ks.get(k, [])
+                if rid in dup_list:
+                    dup_list.remove(rid)
+                busy += t_e - t_s
+                if k in scores:  # speculation duplicate finished second
+                    continue
+                score = evaluate(k)
+                scores[k] = score
+                state.record(k, score, resource=rid)
+                visits.append(SimVisit(k, score, rid, t_s, t_e))
+                # duplicate runs of k elsewhere are now pointless — cancel
+                for r2 in list(dup_list):
+                    kk, ts2, _ = running.pop(r2)
+                    busy += now - ts2
+                    dup_list.remove(r2)
+            if self.abort_in_flight:
+                # §III-D: long fits poll prune state between chunks and exit
+                for rid, (k, t_s, t_e) in list(running.items()):
+                    if not state.should_visit(k):
+                        running.pop(rid)
+                        in_flight_ks.get(k, []) and in_flight_ks[k].remove(rid)
+                        busy += now - t_s
+                        aborted.append(SimVisit(k, float("nan"), rid, t_s, now, aborted=True))
+            for rid in sorted(alive):
+                dispatch(rid)
+
+        # drain queues of never-started ks into skipped
+        for q in queues.values():
+            for k in q:
+                if k not in started:
+                    skipped.append(k)
+
+        return ScheduleTrace(
+            k_optimal=state.k_optimal,
+            visits=visits,
+            aborted=aborted,
+            skipped=sorted(set(skipped)),
+            makespan=now,
+            n_candidates=len(self.space.ks),
+            busy_time=busy,
+            num_resources=self.num_resources,
+        )
+
+
+class ThreadPoolScheduler:
+    """Real-concurrency Binary Bleed across thread resources (Alg 3/4).
+
+    Each worker owns a T4 worklist; shared bounds live in a Coordinator.
+    ``evaluate`` may accept a ``should_abort`` kwarg — a zero-arg callable
+    it can poll between fit chunks (§III-D) to stop early when its k has
+    been pruned by another resource.
+    """
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        num_resources: int,
+        order: Order = "pre",
+        strategy: str = "T4",
+        coordinator=None,  # InProcessCoordinator | FileCoordinator (duck-typed)
+    ):
+        self.space = space
+        self.num_resources = num_resources
+        self.order = order
+        self.strategy = strategy
+        self.coordinator = coordinator if coordinator is not None else InProcessCoordinator()
+
+    def run(self, evaluate: Callable[..., float], skip: set[int] | None = None) -> SearchResult:
+        import inspect
+
+        accepts_abort = False
+        try:
+            accepts_abort = "should_abort" in inspect.signature(evaluate).parameters
+        except (TypeError, ValueError):
+            pass
+
+        space = self.space
+        coord = self.coordinator
+        worklists = plan_worklists(space.ks, self.num_resources, self.order, self.strategy)
+        errors: list[BaseException] = []
+
+        def make_should_visit():
+            def should_visit(k: int) -> bool:
+                b = coord.snapshot()
+                return b.lo_bound < k < b.hi_bound
+
+            return should_visit
+
+        def worker(rid: int, worklist: list[int]) -> None:
+            should_visit = make_should_visit()
+            try:
+                for k in worklist:
+                    if skip and k in skip:  # journaled on a previous run
+                        continue
+                    if not should_visit(k):
+                        continue
+                    if accepts_abort:
+                        score = evaluate(k, should_abort=lambda kk=k: not should_visit(kk))
+                    else:
+                        score = evaluate(k)
+                    coord.record_visit(k, float(score), rid)
+                    lo = k if space.selects(score) else -float("inf")
+                    hi = k if space.stops(score) else float("inf")
+                    k_opt = k if space.selects(score) else None
+                    coord.publish(Bounds(lo, hi, k_opt))
+            except BaseException as e:  # surface worker crashes to the driver
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(rid, wl), daemon=True)
+            for rid, wl in enumerate(worklists)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+
+        b = coord.snapshot()
+        visits = [
+            VisitRecord(k=k, score=s, resource=r, wall_order=i)
+            for i, (k, s, r) in enumerate(coord.visits())
+        ]
+        return SearchResult(b.k_optimal, visits, len(space.ks))

@@ -1,0 +1,16 @@
+"""Factorization & clustering substrates the paper selects k for."""
+from .distributed import (  # noqa: F401
+    distributed_nmf,
+    distributed_rescal,
+    make_local_mesh,
+)
+from .kmeans import KMeansResult, kmeans, kmeans_multi_restart  # noqa: F401
+from .nmf import NMFResult, mu_step, nmf, nmf_chunked, reconstruction_error  # noqa: F401
+from .nmfk import NMFkScore, make_nmfk_evaluator, nmfk_score  # noqa: F401
+from .rescal import (  # noqa: F401
+    RESCALResult,
+    make_rescalk_evaluator,
+    rescal,
+    rescalk_score,
+)
+from .synthetic import blob_data, nmf_data, rescal_data  # noqa: F401

@@ -1,0 +1,103 @@
+"""K-Means in JAX: k-means++ seeding + Lloyd iterations (lax.while_loop).
+
+Used (a) as the paper's K-Means experiment substrate (Davies-Bouldin,
+minimization task), and (b) inside NMFk's custom W-column clustering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import pairwise_sq_dists
+
+Array = jax.Array
+
+
+class KMeansResult(NamedTuple):
+    centroids: Array  # (k, d)
+    labels: Array  # (n,)
+    inertia: Array  # sum of squared distances to assigned centroid
+    iters: Array
+
+
+def _kmeanspp_init(key: Array, x: Array, k: int) -> Array:
+    """k-means++ seeding: sample next center ∝ squared distance."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        centers, key = carry
+        d2 = pairwise_sq_dists(x, centers)  # (n, k)
+        # distance to nearest chosen center; unchosen slots masked by i
+        mask = jnp.arange(k) < i
+        d2 = jnp.where(mask[None, :], d2, jnp.inf)
+        dmin = jnp.min(d2, axis=1)
+        key, sub = jax.random.split(key)
+        p = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        idx = jax.random.choice(sub, n, p=p)
+        return centers.at[i].set(x[idx]), key
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, key))
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_iters"))
+def kmeans(
+    x: Array,
+    k: int,
+    key: Array,
+    max_iters: int = 100,
+    tol: float = 1e-6,
+) -> KMeansResult:
+    """Lloyd's algorithm; empty clusters re-seeded at the farthest point."""
+    centers = _kmeanspp_init(key, x, k)
+
+    def assign(centers):
+        d2 = pairwise_sq_dists(x, centers)
+        labels = jnp.argmin(d2, axis=1)
+        inertia = jnp.sum(jnp.min(d2, axis=1))
+        return labels, inertia
+
+    def cond(carry):
+        _, _, delta, it = carry
+        return jnp.logical_and(delta > tol, it < max_iters)
+
+    def body(carry):
+        centers, _, _, it = carry
+        labels, _ = assign(centers)
+        onehot = jax.nn.one_hot(labels, k, dtype=x.dtype)  # (n, k)
+        counts = jnp.sum(onehot, axis=0)  # (k,)
+        sums = onehot.T @ x  # (k, d)
+        new_centers = sums / jnp.maximum(counts[:, None], 1.0)
+        # re-seed empty clusters at the point farthest from its centroid
+        d2 = pairwise_sq_dists(x, new_centers)
+        far_idx = jnp.argmax(jnp.min(d2, axis=1))
+        new_centers = jnp.where(
+            (counts[:, None] == 0), x[far_idx][None, :], new_centers
+        )
+        delta = jnp.max(jnp.abs(new_centers - centers))
+        return new_centers, labels, delta, it + 1
+
+    labels0, _ = assign(centers)
+    centers, labels, _, iters = jax.lax.while_loop(
+        cond, body, (centers, labels0, jnp.asarray(jnp.inf, x.dtype), jnp.asarray(0))
+    )
+    labels, inertia = assign(centers)
+    return KMeansResult(centers, labels, inertia, iters)
+
+
+def kmeans_multi_restart(
+    x: Array, k: int, key: Array, restarts: int = 4, max_iters: int = 100
+) -> KMeansResult:
+    """vmapped multi-restart; returns the lowest-inertia solution."""
+    keys = jax.random.split(key, restarts)
+    results = jax.vmap(lambda kk: kmeans(x, k, kk, max_iters))(keys)
+    best = jnp.argmin(results.inertia)
+    return KMeansResult(
+        results.centroids[best], results.labels[best], results.inertia[best], results.iters[best]
+    )

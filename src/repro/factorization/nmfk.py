@@ -1,0 +1,144 @@
+"""NMFk — automatic model determination for NMF (refs [1]-[3] of the paper).
+
+The scorer Binary Bleed wraps for NMF. For a candidate k:
+
+  1. Create ``n_perturbs`` resampled copies of V (multiplicative uniform
+     noise — bootstrap perturbations).
+  2. Factorize each: W^(p), H^(p)  (vmapped over perturbations).
+  3. Pool all W columns (n_perturbs × k vectors in R^n, L2-normalized) and
+     custom-cluster them into k groups by greedy alignment to the medoid
+     perturbation (each group holds exactly one column per perturbation —
+     the LANL "custom clustering").
+  4. Score: silhouette of the pooled columns under those clusters
+     (cosine-like geometry via normalized vectors). Stable k ⇒ tight
+     ensemble clusters ⇒ silhouette ≈ 1; overfit k ⇒ split/unstable
+     components ⇒ silhouette collapses. This is the square-wave signal
+     Binary Bleed's pruning assumes.
+
+Returned score is ``min`` cluster silhouette (standard in NMFk: the weakest
+component gates stability), along with mean silhouette and relative error.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import silhouette_score
+
+from .nmf import nmf
+
+Array = jax.Array
+
+
+class NMFkScore(NamedTuple):
+    min_silhouette: Array
+    mean_silhouette: Array
+    rel_error: Array
+
+
+def _perturb(key: Array, v: Array, epsilon: float) -> Array:
+    """Multiplicative uniform resampling: V ∘ U[1-eps, 1+eps]."""
+    return v * jax.random.uniform(key, v.shape, v.dtype, 1.0 - epsilon, 1.0 + epsilon)
+
+
+def _align_columns(w_all: Array) -> Array:
+    """Greedy-match each perturbation's columns to perturbation 0's.
+
+    w_all: (p, n, k) L2-normalized columns. Returns labels (p*k,) grouping
+    each pooled column with its matched reference component — a constrained
+    clustering where every cluster gets exactly one column per perturbation.
+    Greedy argmax over the similarity matrix, masking used columns, is the
+    jit-compatible stand-in for Hungarian matching (exact when components
+    are well separated, which is the regime the silhouette then measures).
+    """
+    p, n, k = w_all.shape
+    ref = w_all[0]  # (n, k)
+
+    def match_one(w_p):
+        sim = ref.T @ w_p  # (k_ref, k_cols)
+
+        def body(_, carry):
+            assign, sim_m = carry
+            flat = jnp.argmax(sim_m)
+            i, j = flat // k, flat % k
+            assign = assign.at[j].set(i)
+            sim_m = sim_m.at[i, :].set(-jnp.inf).at[:, j].set(-jnp.inf)
+            return assign, sim_m
+
+        assign0 = jnp.zeros((k,), jnp.int32)
+        assign, _ = jax.lax.fori_loop(0, k, body, (assign0, sim))
+        return assign  # column j of w_p belongs to cluster assign[j]
+
+    assigns = jax.vmap(match_one)(w_all)  # (p, k)
+    return assigns.reshape(p * k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_perturbs", "nmf_iters"))
+def nmfk_score(
+    v: Array,
+    k: int,
+    key: Array,
+    n_perturbs: int = 8,
+    nmf_iters: int = 150,
+    epsilon: float = 0.015,
+) -> NMFkScore:
+    """Silhouette-stability score of rank k (higher = stable = good)."""
+    kp, kf = jax.random.split(key)
+    pkeys = jax.random.split(kp, n_perturbs)
+    fkeys = jax.random.split(kf, n_perturbs)
+
+    def fit_one(pk, fk):
+        vp = _perturb(pk, v, epsilon)
+        res = nmf(vp, k, fk, iters=nmf_iters)
+        return res.w, res.rel_error
+
+    w_all, errs = jax.vmap(fit_one)(pkeys, fkeys)  # (p, n, k), (p,)
+    # L2-normalize columns — NMFk clusters directions, not magnitudes
+    w_all = w_all / jnp.maximum(jnp.linalg.norm(w_all, axis=1, keepdims=True), 1e-12)
+    labels = _align_columns(w_all)  # (p*k,)
+    cols = jnp.transpose(w_all, (0, 2, 1)).reshape(-1, v.shape[0])  # (p*k, n)
+    sil_mean = silhouette_score(cols, labels, num_clusters=k)
+    # per-cluster min silhouette
+    d = jnp.sqrt(
+        jnp.maximum(
+            jnp.sum(cols**2, 1)[:, None] + jnp.sum(cols**2, 1)[None, :] - 2 * cols @ cols.T,
+            0.0,
+        )
+    )
+    onehot = jax.nn.one_hot(labels, k, dtype=cols.dtype)
+    sizes = jnp.sum(onehot, axis=0)
+    dist_sums = d @ onehot
+    npts = cols.shape[0]
+    a = dist_sums[jnp.arange(npts), labels] / jnp.maximum(sizes[labels] - 1.0, 1.0)
+    mean_to = dist_sums / jnp.maximum(sizes[None, :], 1.0)
+    mask_own = jax.nn.one_hot(labels, k, dtype=bool)
+    b = jnp.min(jnp.where(mask_own, jnp.inf, mean_to), axis=1)
+    s = (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-12)
+    s = jnp.where(sizes[labels] <= 1.0, 0.0, s)
+    per_cluster = (onehot.T @ s) / jnp.maximum(sizes, 1.0)
+    # guard: k=1 has a single cluster, silhouette undefined -> 1.0 (stable)
+    min_sil = jnp.where(k > 1, jnp.min(per_cluster), 1.0)
+    sil_mean = jnp.where(k > 1, sil_mean, 1.0)
+    return NMFkScore(min_sil, sil_mean, jnp.mean(errs))
+
+
+def make_nmfk_evaluator(
+    v: Array,
+    key: Array,
+    n_perturbs: int = 8,
+    nmf_iters: int = 150,
+    epsilon: float = 0.015,
+    statistic: str = "min",
+) -> Callable[[int], float]:
+    """Binary Bleed ``evaluate(k)`` closure over a dataset."""
+
+    def evaluate(k: int, should_abort=None) -> float:
+        del should_abort  # jit'd fast path has no chunk boundary to poll
+        sub = jax.random.fold_in(key, k)
+        sc = nmfk_score(v, int(k), sub, n_perturbs=n_perturbs, nmf_iters=nmf_iters, epsilon=epsilon)
+        return float(sc.min_silhouette if statistic == "min" else sc.mean_silhouette)
+
+    return evaluate

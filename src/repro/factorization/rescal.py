@@ -1,0 +1,128 @@
+"""Nonnegative RESCAL via multiplicative updates (paper's pyDRESCALk model).
+
+X (r, n, n) ≈ A R_r A^T with A (n, k) >= 0, R_r (k, k) >= 0.
+
+MU updates (Frobenius objective, nonnegative RESCAL):
+
+    A <- A * Σ_r (X_r A R_r^T + X_r^T A R_r)
+             / Σ_r (A R_r A^T A R_r^T + A R_r^T A^T A R_r)        (+ eps)
+    R_r <- R_r * (A^T X_r A) / (A^T A R_r A^T A + eps)
+
+RESCALk scoring mirrors NMFk: perturbation ensemble, align A columns,
+silhouette stability + relative error.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import silhouette_score
+
+Array = jax.Array
+_EPS = 1e-9
+
+
+class RESCALResult(NamedTuple):
+    a: Array  # (n, k)
+    r: Array  # (nr, k, k)
+    rel_error: Array
+
+
+def _init(key: Array, n: int, nr: int, k: int, x_mean: Array, dtype):
+    ka, kr = jax.random.split(key)
+    scale = jnp.sqrt(jnp.maximum(x_mean, _EPS)) / k
+    a = scale * jax.random.uniform(ka, (n, k), dtype, 0.1, 1.0)
+    r = scale * jax.random.uniform(kr, (nr, k, k), dtype, 0.1, 1.0)
+    return a, r
+
+
+def rescal_step(x: Array, a: Array, r: Array) -> tuple[Array, Array]:
+    """One MU sweep (A then R)."""
+    ata = a.T @ a  # (k, k)
+    # A update
+    num = jnp.einsum("rij,jl,rkl->ik", x, a, r) + jnp.einsum("rji,jl,rlk->ik", x, a, r)
+    arat = jnp.einsum("rkl,lm,rnm->rkn", r, ata, r)  # R_r A^T A R_r^T
+    arat2 = jnp.einsum("rlk,lm,rmn->rkn", r, ata, r)  # R_r^T A^T A R_r
+    den = a @ jnp.sum(arat + arat2, axis=0)
+    a = a * num / (den + _EPS)
+    # R update
+    ata = a.T @ a
+    num_r = jnp.einsum("li,rlm,mj->rij", a, x, a)  # A^T X_r A
+    den_r = jnp.einsum("ik,rkl,lj->rij", ata, r, ata)
+    r = r * num_r / (den_r + _EPS)
+    return a, r
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def rescal(x: Array, k: int, key: Array, iters: int = 150) -> RESCALResult:
+    nr, n, _ = x.shape
+    a, r = _init(key, n, nr, k, jnp.mean(x), x.dtype)
+
+    def body(_, ar):
+        return rescal_step(x, *ar)
+
+    a, r = jax.lax.fori_loop(0, iters, body, (a, r))
+    recon = jnp.einsum("ik,rkl,jl->rij", a, r, a)
+    err = jnp.linalg.norm(x - recon) / jnp.maximum(jnp.linalg.norm(x), _EPS)
+    return RESCALResult(a, r, err)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_perturbs", "iters"))
+def rescalk_score(
+    x: Array,
+    k: int,
+    key: Array,
+    n_perturbs: int = 6,
+    iters: int = 120,
+    epsilon: float = 0.015,
+) -> tuple[Array, Array]:
+    """(min cluster silhouette of A-column ensemble, mean rel_error)."""
+    kp, kf = jax.random.split(key)
+    pkeys = jax.random.split(kp, n_perturbs)
+    fkeys = jax.random.split(kf, n_perturbs)
+
+    def fit_one(pk, fk):
+        xp = x * jax.random.uniform(pk, x.shape, x.dtype, 1.0 - epsilon, 1.0 + epsilon)
+        res = rescal(xp, k, fk, iters=iters)
+        return res.a, res.rel_error
+
+    a_all, errs = jax.vmap(fit_one)(pkeys, fkeys)  # (p, n, k)
+    a_all = a_all / jnp.maximum(jnp.linalg.norm(a_all, axis=1, keepdims=True), 1e-12)
+
+    # greedy column alignment against perturbation 0 (same as NMFk)
+    ref = a_all[0]
+
+    def match_one(a_p):
+        sim = ref.T @ a_p
+
+        def body(_, carry):
+            assign, sim_m = carry
+            flat = jnp.argmax(sim_m)
+            i, j = flat // k, flat % k
+            assign = assign.at[j].set(i)
+            sim_m = sim_m.at[i, :].set(-jnp.inf).at[:, j].set(-jnp.inf)
+            return assign, sim_m
+
+        assign, _ = jax.lax.fori_loop(0, k, body, (jnp.zeros((k,), jnp.int32), sim))
+        return assign
+
+    labels = jax.vmap(match_one)(a_all).reshape(-1)
+    cols = jnp.transpose(a_all, (0, 2, 1)).reshape(-1, x.shape[1])
+    sil = silhouette_score(cols, labels, num_clusters=k)
+    sil = jnp.where(k > 1, sil, 1.0)
+    return sil, jnp.mean(errs)
+
+
+def make_rescalk_evaluator(
+    x: Array, key: Array, n_perturbs: int = 6, iters: int = 120
+) -> Callable[[int], float]:
+    def evaluate(k: int, should_abort=None) -> float:
+        del should_abort
+        sub = jax.random.fold_in(key, k)
+        sil, _ = rescalk_score(x, int(k), sub, n_perturbs=n_perturbs, iters=iters)
+        return float(sil)
+
+    return evaluate

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (validated via interpret=True).
+
+  * nmf_update      — fused multiplicative-update GEMM+epilogue (T_model)
+  * pairwise_dist   — fused distance-matrix GEMM+norms (T_scorer)
+  * flash_attention — causal/windowed GQA online-softmax attention (LM substrate)
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import flash_attention, mu_update_h, mu_update_w, pairwise_sq_dists  # noqa: F401

@@ -1,0 +1,149 @@
+"""Causal GQA flash attention Pallas kernel (TPU target).
+
+The LM substrate's dominant compute. Online-softmax tiling (Dao et al.)
+re-thought for TPU: (bq × d) query tiles resident in VMEM, kv tiles
+streamed HBM→VMEM along the innermost grid axis, fp32 running (m, l, acc)
+in VMEM scratch, output written once per q tile. MXU-aligned block shapes
+(bq, bk multiples of 128 at the target; interpret mode relaxes this).
+
+Supports:
+  * causal masking,
+  * GQA: kv-head blocks are index-mapped as ``h_q // group`` so grouped
+    query heads stream the same kv tiles (no kv replication in HBM),
+  * sliding-window attention (h2o-danube / Jamba-style local attention):
+    ``window`` keys — with causal+window, fully-masked kv tiles are
+    skipped entirely, making train-time attention O(L·W).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_BIG = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    out_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    bq: int,
+    bk: int,
+    kv_steps: int,
+    causal: bool,
+    window: int | None,
+):
+    qi = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = s * bk
+
+    # tile-level skip: with causal (and optional window) some kv tiles are
+    # entirely masked — do no work for them.
+    tile_live = jnp.asarray(True)
+    if causal:
+        tile_live = k_start <= q_start + bq - 1
+    if window is not None:
+        tile_live = jnp.logical_and(tile_live, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(tile_live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        st = (
+            jax.lax.dot_general(
+                q, k, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (bq, bk)
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_idx <= q_idx)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_idx > q_idx - window)
+        st = jnp.where(mask, st, _NEG_BIG)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(st, axis=1, keepdims=True))
+        p = jnp.exp(st - m_new)  # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(s == kv_steps - 1)
+    def _finalize():
+        out_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "scale", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Lq, D)
+    k: jax.Array,  # (B, Hk, Lk, D)
+    v: jax.Array,  # (B, Hk, Lk, D)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hk, lk, _ = k.shape
+    assert hq % hk == 0, (hq, hk)
+    group = hq // hk
+    assert lq % bq == 0 and lk % bk == 0, (lq, lk, bq, bk)
+    scale = float(scale if scale is not None else d ** -0.5)
+    kv_steps = lk // bk
+    grid = (b, hq, lq // bq, kv_steps)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        bq=bq,
+        bk=bk,
+        kv_steps=kv_steps,
+        causal=causal,
+        window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, qi, s: (bi, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, h, qi, s, g=group: (bi, h // g, s, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, h, qi, s, g=group: (bi, h // g, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, h, qi, s: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[_vmem((bq, 1)), _vmem((bq, 1)), _vmem((bq, d))],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

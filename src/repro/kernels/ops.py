@@ -1,0 +1,115 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to MXU/lane alignment, dtype plumbing, and interpret-mode
+fallback (this container is CPU-only; on CPU the kernels execute their
+Python bodies under ``interpret=True`` — bit-identical logic, same BlockSpec
+walk — while on TPU the same code lowers to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import nmf_update as _nmf
+from . import pairwise_dist as _pd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# -----------------------------------------------------------------------------
+# NMF multiplicative updates
+# -----------------------------------------------------------------------------
+def mu_update_h(v: jax.Array, w: jax.Array, h: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Fused H <- H * (W^T V)/(W^T W H + eps); pads (n, m, k) to tiles."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, m = v.shape
+    k = w.shape[1]
+    bn = 128 if n % 128 == 0 else 8
+    bm = 128 if m % 128 == 0 else 8
+    vp = _pad_to(_pad_to(v, 0, bn), 1, bm)
+    wp = _pad_to(_pad_to(w, 0, bn), 1, 8)
+    hp = _pad_to(_pad_to(h, 0, 8), 1, bm)
+    g = wp.T @ wp  # (kp, kp) — cheap, fp32
+    out = _nmf.h_update(vp, wp, hp, g, bm=bm, bn=bn, interpret=interpret)
+    return out[:k, :m].astype(h.dtype)
+
+
+def mu_update_w(v: jax.Array, w: jax.Array, h: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Fused W <- W * (V H^T)/(W H H^T + eps)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, m = v.shape
+    k = w.shape[1]
+    bn = 128 if n % 128 == 0 else 8
+    bm = 128 if m % 128 == 0 else 8
+    vp = _pad_to(_pad_to(v, 0, bn), 1, bm)
+    wp = _pad_to(_pad_to(w, 0, bn), 1, 8)
+    hp = _pad_to(_pad_to(h, 0, 8), 1, bm)
+    q = hp @ hp.T
+    out = _nmf.w_update(vp, hp, wp, q, bm=bm, bn=bn, interpret=interpret)
+    return out[:n, :k].astype(w.dtype)
+
+
+# -----------------------------------------------------------------------------
+# Pairwise distances
+# -----------------------------------------------------------------------------
+def pairwise_sq_dists(x: jax.Array, y: jax.Array | None = None, interpret: bool | None = None) -> jax.Array:
+    interpret = _interpret_default() if interpret is None else interpret
+    y = x if y is None else y
+    n, d = x.shape
+    m = y.shape[0]
+    bn = 128 if n % 128 == 0 else 8
+    bm = 128 if m % 128 == 0 else 8
+    bd = 128 if d % 128 == 0 else 8
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    yp = _pad_to(_pad_to(y, 0, bm), 1, bd)
+    out = _pd.pairwise_sq_dists(xp, yp, bn=bn, bm=bm, bd=bd, interpret=interpret)
+    return out[:n, :m]
+
+
+# -----------------------------------------------------------------------------
+# Flash attention
+# -----------------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Causal/windowed GQA flash attention; pads L to tiles and D to lanes."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, hq, lq, d = q.shape
+    lk = k.shape[2]
+    scale = float(scale if scale is not None else d ** -0.5)
+    bq = 128 if lq % 128 == 0 else 8
+    bk = 128 if lk % 128 == 0 else 8
+    dp = 128 if d % 128 == 0 else 8
+    qp = _pad_to(_pad_to(q, 2, bq), 3, dp)
+    kp = _pad_to(_pad_to(k, 2, bk), 3, dp)
+    vp = _pad_to(_pad_to(v, 2, bk), 3, dp)
+    # Padded kv rows sit at indices >= lk; with causal masking and lq == lk
+    # no real query row can attend them (k_idx > q_idx), so zero-padding is
+    # exact. Non-causal use requires pre-aligned lengths.
+    if kp.shape[2] != lk:
+        assert causal and lq == lk, "kv-length padding requires causal attention with lq == lk"
+    out = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window, scale=scale, bq=bq, bk=bk, interpret=interpret
+    )
+    return out[:, :, :lq, :d]

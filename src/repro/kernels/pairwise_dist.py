@@ -1,0 +1,78 @@
+"""Blocked pairwise squared-L2 distance Pallas kernel (TPU target).
+
+T_scorer hot spot: silhouette and Davies-Bouldin both need all-pairs
+distances D2[i,j] = ||x_i||^2 + ||y_j||^2 - 2 x_i.y_j. The GPU reference
+builds D2 from a GEMM plus two broadcast passes; the TPU version fuses the
+norm computation and the bias into the GEMM epilogue so each (bn, bm)
+output tile is produced in one VMEM-resident pass — one HBM write of D2,
+zero intermediate reads.
+
+Feature dim d is padded to the 128-lane width by ops.py (zero padding is
+exact for distances). Grid reduces over d-tiles for large d.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(x_ref, y_ref, out_ref, acc_ref, *, n_steps: int):
+    """Grid = (n_tiles, m_tiles, d_steps): acc += -2 X_blk Y_blk^T, plus
+    per-tile row norms folded in on the final step."""
+    step = pl.program_id(2)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, bd)
+    y = y_ref[...].astype(jnp.float32)  # (bm, bd)
+    acc_ref[...] += (
+        jax.lax.dot_general(
+            x, y, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * -2.0
+        + jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+    )
+
+    @pl.when(step == n_steps - 1)
+    def _finalize():
+        out_ref[...] = jnp.maximum(acc_ref[...], 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bd", "interpret"))
+def pairwise_sq_dists(
+    x: jax.Array,  # (n, d)
+    y: jax.Array,  # (m, d)
+    bn: int = 128,
+    bm: int = 128,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = x.shape
+    m = y.shape[0]
+    assert n % bn == 0 and m % bm == 0 and d % bd == 0, (n, m, d)
+    n_steps = d // bd
+    grid = (n // bn, m // bm, n_steps)
+    return pl.pallas_call(
+        functools.partial(_pairwise_kernel, n_steps=n_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bm, bd), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        scratch_shapes=[_vmem((bn, bm))],
+        interpret=interpret,
+    )(x, y)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def mu_update_h_ref(v: jax.Array, w: jax.Array, h: jax.Array) -> jax.Array:
+    """H <- H * (W^T V) / (W^T W H + eps), fp32 math."""
+    v, w, h = (a.astype(jnp.float32) for a in (v, w, h))
+    return h * (w.T @ v) / (w.T @ w @ h + _EPS)
+
+
+def mu_update_w_ref(v: jax.Array, w: jax.Array, h: jax.Array) -> jax.Array:
+    """W <- W * (V H^T) / (W H H^T + eps), fp32 math."""
+    v, w, h = (a.astype(jnp.float32) for a in (v, w, h))
+    return w * (v @ h.T) / (w @ (h @ h.T) + _EPS)
+
+
+def pairwise_sq_dists_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (
+        jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+        - 2.0 * (x @ y.T)
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Lq, D)
+    k: jax.Array,  # (B, Hk, Lk, D)
+    v: jax.Array,  # (B, Hk, Lk, D)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense softmax attention with GQA/causal/sliding-window, fp32 math."""
+    b, hq, lq, d = q.shape
+    _, hk, lk, _ = k.shape
+    group = hq // hk
+    scale = float(scale if scale is not None else d ** -0.5)
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    q_idx = jnp.arange(lq)[:, None] + (lk - lq)  # decode offset when lq < lk
+    k_idx = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

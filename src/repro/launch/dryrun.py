@@ -1,0 +1,457 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any jax import (jax locks the
+# device count on first init). That also forbids `from __future__` here.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  * build the production mesh (16×16 or 2×16×16),
+  * build the model + sharding specs (TP over 'model', FSDP over 'data',
+    batch over ('pod','data')),
+  * jit(step).lower(<ShapeDtypeStructs>).compile()  — no allocation,
+  * record memory_analysis, cost_analysis (FLOPs/bytes), and the
+    collective census parsed from the optimized HLO (op × shape × bytes,
+    scan trip counts folded in via known_trip_count),
+  * append one JSON record to results/dryrun/<cell>.json (resumable).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, registry, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import apply_fsdp, dp_size, make_axes, make_production_mesh, named
+from repro.models.transformer import Model
+from repro.serve.decode import make_serve_step
+from repro.train.optimizer import init_opt_state, opt_state_specs
+from repro.train.train_step import auto_train_config, batch_specs, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(.*?\)|\S+)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# computation header: `%name (params...) -> result {` — params may nest parens
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-$]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-$]+)\s*=\s*"
+    r"((?:bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[[0-9,]*\])"
+)
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _bytes_of(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _shape_bytes_between(line: str, start: int, end: int) -> int:
+    """Sum bytes of every typed shape in line[start:end] (tuple-aware)."""
+    return sum(_bytes_of(dt, dims) for dt, dims in _SHAPE_RE.findall(line[start:end]))
+
+
+_DOT_LINE_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?[\w.\-$]+\s*=\s*"
+    r"(bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8)\[([0-9,]*)\]\S*\s+dot\(%?([\w.\-$]+),"
+)
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-$]+)")
+_SKIP_OPS = (
+    " parameter(", " constant(", " tuple(", " get-tuple-element(", " bitcast(",
+    " after-all(", " partition-id(", " iota(",
+)
+
+
+def parse_hlo(hlo_text: str) -> dict[str, Any]:
+    """Post-SPMD HLO census with loop trip counts folded in. Per device:
+
+      * collective ops: count + payload bytes (output-shape convention),
+      * dot FLOPs: 2 * prod(result dims) * prod(lhs contracting dims),
+        resolving lhs shapes through a per-computation symbol table,
+      * HBM traffic estimate: result bytes of top-level (non-fusion-body)
+        instructions — fusion internals are VMEM/register traffic.
+
+    Trip counts come from `known_trip_count` backend configs when present,
+    else from the s32 constant in the while condition (jax counted scans).
+    """
+    lines_all = hlo_text.splitlines()
+    comps: dict[str, list[str]] = {}
+    order: list[str] = []
+    cur = None
+    entry = None
+    for line in lines_all:
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            order.append(cur)
+            if line.startswith("ENTRY"):
+                entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+    if entry is None:
+        entry = order[-1] if order else None
+
+    # computations that are fusion bodies / reducers (internal traffic only)
+    internal: set[str] = set()
+    for name, lines in comps.items():
+        for line in lines:
+            if " fusion(" in line or " reduce(" in line or " reduce-window(" in line \
+               or " scatter(" in line or " sort(" in line or " select-and-scatter(" in line:
+                for ref in _CALLS_RE.findall(line):
+                    internal.add(ref)
+
+    raw_coll: dict[str, dict[str, tuple[int, int]]] = {}
+    raw_flops: dict[str, int] = {}
+    raw_traffic: dict[str, int] = {}
+    while_edges: dict[str, list[tuple[str, str, int]]] = {n: [] for n in comps}
+    call_edges: dict[str, list[str]] = {n: [] for n in comps}
+    cond_consts: dict[str, int] = {}
+
+    for name, lines in comps.items():
+        # symbol table: instruction -> (dtype, dims) for dot operand lookup
+        sym: dict[str, tuple[str, list[int]]] = {}
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if im:
+                dt_dims = _SHAPE_RE.match(im.group(2))
+                if dt_dims:
+                    sym[im.group(1)] = (
+                        dt_dims.group(1),
+                        [int(d) for d in dt_dims.group(2).split(",") if d],
+                    )
+        consts = [int(c) for c in _S32_CONST_RE.findall("\n".join(lines))]
+        if consts:
+            cond_consts[name] = max(consts)
+        by_op: dict[str, tuple[int, int]] = {}
+        flops = 0
+        traffic = 0
+        fusion_body = name in internal
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if cm and "-done" not in line[: cm.end()]:
+                op = cm.group(1)
+                eq = line.find("=")
+                b = _shape_bytes_between(line, eq, cm.start(1))
+                c, bb = by_op.get(op, (0, 0))
+                by_op[op] = (c + 1, bb + b)
+            dm = _DOT_LINE_RE.match(line)
+            if dm:
+                res_dims = [int(d) for d in dm.group(2).split(",") if d]
+                lhs_name = dm.group(3)
+                ctr = _CONTRACT_RE.search(line)
+                cdims = [int(d) for d in ctr.group(1).split(",") if d] if ctr else []
+                lhs = sym.get(lhs_name)
+                k = 1
+                if lhs:
+                    for i in cdims:
+                        if i < len(lhs[1]):
+                            k *= lhs[1][i]
+                n = 1
+                for d in res_dims:
+                    n *= d
+                flops += 2 * n * k
+            if not fusion_body:
+                im = _INSTR_RE.match(line)
+                if im and not any(s in line for s in _SKIP_OPS):
+                    dt_dims = _SHAPE_RE.match(im.group(2))
+                    if dt_dims:
+                        traffic += _bytes_of(dt_dims.group(1), dt_dims.group(2))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 0
+                while_edges[name].append((wm.group(1), wm.group(2), trips))
+            elif " fusion(" in line or " call(" in line or "conditional(" in line:
+                for ref in _CALLS_RE.findall(line):
+                    call_edges[name].append(ref)
+        raw_coll[name] = by_op
+        raw_flops[name] = flops
+        raw_traffic[name] = traffic
+
+    totals: dict[str, tuple[int, int]] = {}
+    total_flops = 0
+    total_traffic = 0
+    visiting: set[str] = set()
+
+    def visit(name: str, mult: int):
+        nonlocal total_flops, total_traffic
+        if name not in comps or name in visiting:
+            return
+        visiting.add(name)
+        for op, (c, b) in raw_coll.get(name, {}).items():
+            cc, bb = totals.get(op, (0, 0))
+            totals[op] = (cc + c, bb + b * mult)
+        total_flops += raw_flops.get(name, 0) * mult
+        total_traffic += raw_traffic.get(name, 0) * mult
+        for cond, body, trips in while_edges.get(name, []):
+            if trips <= 0:
+                trips = cond_consts.get(cond, 1)
+            visit(body, mult * max(trips, 1))
+        for child in call_edges.get(name, []):
+            visit(child, mult)
+        visiting.discard(name)
+
+    if entry:
+        visit(entry, 1)
+    by_op = {op: {"count": c, "bytes": int(b)} for op, (c, b) in totals.items()}
+    return {
+        "by_op": by_op,
+        "total_bytes": int(sum(v["bytes"] for v in by_op.values())),
+        "dot_flops_per_device": int(total_flops),
+        "hbm_traffic_per_device": int(total_traffic),
+    }
+
+
+parse_collectives = parse_hlo  # back-compat alias
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, l = shape.global_batch, shape.seq_len
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = sds((b, l), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = sds((b, l), jnp.int32)
+        if arch.input_mode == "embeddings":
+            out["embeds"] = sds((b, l, arch.d_model), jnp.bfloat16)
+    else:  # decode: one new token against a cache of length l
+        out["tokens"] = sds((b, 1), jnp.int32)
+    return out
+
+
+def build_cell(arch_name: str, shape_name: str, multi_pod: bool):
+    """Returns (lower_fn, meta) for one cell; lower_fn() -> compiled."""
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = make_axes(mesh, shape.global_batch)
+    model = Model(
+        arch, ax,
+        remat="full" if shape.kind == "train" else "none",
+        remat_group=6 if arch.param_count() >= 100e9 else 1,
+    )
+    key = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(model.init, key)
+    pspecs = apply_fsdp(model.param_specs(), params_shape,
+                        fsdp_axis="data", fsdp_size=mesh.shape["data"])
+    pshard = named(mesh, pspecs)
+    ins = input_specs(arch, shape)
+
+    if shape.kind == "train":
+        tcfg = auto_train_config(arch.param_count(), shape.global_batch, dp_size(mesh), moe=arch.moe is not None)
+        step = make_train_step(model, tcfg)
+        opt_shape = jax.eval_shape(lambda p: init_opt_state(p, tcfg.opt), params_shape)
+        ospecs = opt_state_specs(pspecs, ax, zero1=False)
+        oshard = named(mesh, ospecs)
+        bshard = named(mesh, batch_specs(model))
+        bshard = {k: bshard[k] for k in ins}
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+
+        def lower():
+            with mesh:
+                return fn.lower(params_shape, opt_shape, ins)
+
+        meta = {"kind": "train", "microbatches": tcfg.microbatches}
+        return lower, meta
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cache_len=shape.seq_len)
+
+        cshard = named(mesh, model.cache_specs())
+        bsp = {k: P(ax.b, *([None] * (len(v.shape) - 1))) for k, v in ins.items()}
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(pshard, named(mesh, bsp)),
+            out_shardings=(None, cshard),
+        )
+
+        def lower():
+            with mesh:
+                return fn.lower(params_shape, ins)
+
+        return lower, {"kind": "prefill"}
+
+    # decode
+    serve = make_serve_step(model)
+    cache_shape = jax.eval_shape(
+        lambda: model.cache_init(shape.global_batch, shape.seq_len)
+    )
+    cshard = named(mesh, model.cache_specs())
+    tok_shard = named(mesh, {"tokens": P(ax.b, None)})["tokens"]
+    fn = jax.jit(
+        serve,
+        in_shardings=(pshard, cshard, tok_shard, None, None),
+        out_shardings=(tok_shard, cshard),
+        donate_argnums=(1,),
+    )
+    pos = sds((), jnp.int32)
+    rng = sds((2,), jnp.uint32)
+
+    def lower():
+        with mesh:
+            return fn.lower(params_shape, cache_shape, ins["tokens"], pos, rng)
+
+    return lower, {"kind": "decode"}
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: str,
+             collect_hlo: bool = True, force: bool = False) -> dict[str, Any]:
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch_name}__{shape_name}__{mesh_name}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(arch, shape)
+    rec: dict[str, Any] = {
+        "cell": cell_id, "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "params": arch.param_count(), "active_params": arch.active_param_count(),
+    }
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        _write(out_path, rec)
+        return rec
+
+    try:
+        t0 = time.time()
+        lower, meta = build_cell(arch_name, shape_name, multi_pod)
+        lowered = lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec.update(meta)
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            } if mem is not None else None
+        except Exception as e:  # CPU backend may not support it
+            rec["memory_analysis"] = f"unavailable: {e}"
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals", "optimal_seconds")
+                    or k.startswith("bytes accessed")
+                    or k.startswith("utilization")
+                )
+            }
+        except Exception as e:
+            rec["cost_analysis"] = f"unavailable: {e}"
+        if collect_hlo:
+            try:
+                text = compiled.as_text()
+                census = parse_hlo(text)
+                rec["collectives"] = {
+                    "by_op": census["by_op"], "total_bytes": census["total_bytes"]
+                }
+                rec["dot_flops_per_device"] = census["dot_flops_per_device"]
+                rec["hbm_traffic_per_device"] = census["hbm_traffic_per_device"]
+                rec["hlo_bytes"] = len(text)
+                del text
+            except Exception as e:
+                rec["collectives"] = f"unavailable: {e}"
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict) -> None:
+    with open(path + ".tmp", "w") as f:
+        json.dump(rec, f, indent=1)
+    os.replace(path + ".tmp", path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out or os.path.abspath(RESULTS_DIR)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = [args.arch] if args.arch else sorted(registry())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if not args.all and args.arch is None:
+        ap.error("pass --arch/--shape or --all")
+
+    n_ok = n_err = n_skip = 0
+    for multi in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, multi, out_dir, collect_hlo=not args.no_hlo,
+                               force=args.force)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_err += tag == "error"
+                n_skip += tag == "skip"
+                extra = ""
+                if tag == "ok":
+                    fl = rec.get("cost_analysis", {})
+                    fl = fl.get("flops") if isinstance(fl, dict) else None
+                    extra = f" flops={fl:.3e}" if fl else ""
+                    extra += f" lower={rec['lower_s']}s compile={rec['compile_s']}s"
+                if tag == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{tag:5s}] {rec['cell']}{extra}", flush=True)
+    print(f"done: ok={n_ok} err={n_err} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models.layers import Axes
+from repro.models.transformer import Model
+from repro.serve.decode import generate
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = Model(cfg, Axes(batch=("data",), model="model", model_size=1),
+                  remat="none", dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    extra = None
+    if cfg.input_mode == "embeddings":
+        extra = {"embeds": 0.02 * jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32)}
+    t0 = time.time()
+    out = generate(model, params, prompt, steps=args.tokens,
+                   temperature=args.temperature, batch_extra=extra)
+    dt = time.time() - t0
+    if not args.quiet:
+        print(f"generated {args.batch}x{args.tokens} tokens in {dt:.2f}s")
+        print("sample:", out[0].tolist())
+    return {"tokens": out, "seconds": dt}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end training driver.
+
+CPU-scale by default (reduced config) so the full loop — data pipeline,
+jit'd train_step with grad accumulation, async checkpointing, restart —
+is actually exercised; pass --full only on real hardware.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 50 \
+      --reduced --ckpt /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, SyntheticTokenSource
+from repro.models.layers import Axes
+from repro.models.transformer import Model
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compression", default="none", choices=["none", "bf16", "int8"])
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    model = Model(cfg, Axes(batch=("data",), model="model", model_size=1),
+                  remat="none", dtype=jnp.float32)
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=max(args.steps, 10)),
+        microbatches=args.microbatches,
+        compression=args.compression,
+    )
+    step_fn = jax.jit(make_train_step(model, tcfg))
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt = init_opt_state(params, tcfg.opt)
+    start_step = 0
+    saver = None
+    if args.ckpt:
+        saver = ckpt.AsyncCheckpointer(args.ckpt)
+        if args.resume and ckpt.latest_step(args.ckpt) is not None:
+            (params, opt), start_step = ckpt.restore(args.ckpt, (params, opt))
+            if not args.quiet:
+                print(f"resumed from step {start_step}")
+
+    src = SyntheticTokenSource(cfg, shape, DataConfig(seed=0))
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        if not args.quiet and (step % 5 == 0 or step == args.steps - 1):
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} lr {float(metrics['lr']):.2e}")
+        if saver and (step + 1) % args.ckpt_every == 0:
+            saver.submit(step + 1, (params, opt))
+    if saver:
+        saver.submit(args.steps, (params, opt))
+        saver.close()
+    dt = time.time() - t0
+    if not args.quiet:
+        print(f"{args.steps - start_step} steps in {dt:.1f}s; "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return {"losses": losses, "params": params, "final_loss": losses[-1] if losses else np.nan}
+
+
+if __name__ == "__main__":
+    main()

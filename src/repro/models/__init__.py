@@ -1,0 +1,2 @@
+from .layers import Axes  # noqa: F401
+from .transformer import Model, build_segments, seq_sharded_mode  # noqa: F401

@@ -1,0 +1,434 @@
+"""Attention mixers: GQA (+RoPE, sliding window, QKV bias) and DeepSeek-V2
+MLA (multi-head latent attention) — train/prefill and KV-cache decode paths.
+
+TPU adaptations:
+  * train/prefill can route through the Pallas flash-attention kernel
+    (``use_flash``); default is the einsum path (XLA fuses well, and the
+    kernel is validated against it).
+  * decode caches: GQA keeps (k, v) ring-buffered to the attention window
+    when one exists (O(window) memory at 500k contexts); MLA caches the
+    576-dim latent (c_kv ‖ k_rope) and uses the absorbed-matmul decode —
+    attention reads scale with kv_lora_rank, not heads×head_dim.
+  * sharding: heads shard over 'model' when divisible by the axis size,
+    else head_dim, else replicated (`Axes.dim_axis`).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from .layers import Axes, dense_init, rmsnorm, rmsnorm_init, rmsnorm_specs, shard
+
+Array = jax.Array
+PyTree = Any
+_NEG = -1e30
+
+
+# -----------------------------------------------------------------------------
+# RoPE
+# -----------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., L, H, hd) or (..., L, hd); positions: (L,) or (B, L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # x is (..., L, H, hd): insert the head axis so (L, half) -> (L, 1, half)
+    cos, sin = jnp.expand_dims(cos, -2), jnp.expand_dims(sin, -2)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _sdpa(
+    q: Array,  # (B, Lq, H, hd)
+    k: Array,  # (B, Lk, Hk, hd)
+    v: Array,  # (B, Lk, Hk, hd)
+    causal: bool,
+    window: int | None,
+    q_offset: Array | int = 0,
+    kv_len: Array | None = None,
+    scale: float | None = None,
+) -> Array:
+    """Dense scaled-dot-product attention with GQA + causal/window/len masks.
+
+    ``q_offset``: absolute position of q row 0 (decode: current pos).
+    ``kv_len``: number of valid kv entries (decode with ring/full cache).
+    """
+    b, lq, h, hd = q.shape
+    lk, hk = k.shape[1], k.shape[2]
+    group = h // hk
+    scale = float(scale if scale is not None else hd**-0.5)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, jnp.repeat(k.astype(jnp.float32), group, axis=2))
+    q_idx = jnp.asarray(q_offset) + jnp.arange(lq)[:, None]
+    k_idx = jnp.arange(lk)[None, :]
+    # additive (lq, lk) bias instead of a boolean mask select: the broadcast
+    # to (b, h, lq, lk) stays fused — a materialized pred mask at that shape
+    # is GBs and gets hoisted into loop carries by XLA.
+    bias = jnp.zeros((lq, lk), jnp.float32)
+    if causal:
+        bias = jnp.where(k_idx <= q_idx, bias, _NEG)
+    if window is not None:
+        bias = jnp.where(k_idx > q_idx - window, bias, _NEG)
+    if kv_len is not None:
+        bias = jnp.where(k_idx < kv_len, bias, _NEG)
+    s = s + bias[None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, jnp.repeat(v.astype(jnp.float32), group, axis=2))
+    return out.astype(q.dtype)
+
+
+_CHUNK_THRESHOLD = 2048  # above this, full (Lq, Lk) scores would blow HBM
+_Q_CHUNK = 1024
+
+
+def _sdpa_auto(
+    q: Array, k: Array, v: Array, causal: bool, window: int | None, scale: float | None = None
+) -> Array:
+    """Dense attention for short seqs; q-chunked (scanned) for long ones.
+
+    The chunked form bounds live score memory to (B, H, q_chunk, Lk) per
+    step — the XLA analogue of flash attention's outer loop (the Pallas
+    kernel is the TPU fast path; this is the portable lowering the dry-run
+    compiles). One full pass over K/V per chunk keeps HBM traffic linear.
+    """
+    b, lq, h, hd = q.shape
+    if lq <= _CHUNK_THRESHOLD:
+        return _sdpa(q, k, v, causal=causal, window=window, scale=scale)
+    qc = _Q_CHUNK
+    assert lq % qc == 0, (lq, qc)
+    n = lq // qc
+    xs = jnp.moveaxis(q.reshape(b, n, qc, h, hd), 1, 0)  # (n, b, qc, h, hd)
+
+    def step(i, q_blk):
+        out_blk = _sdpa(q_blk, k, v, causal=causal, window=window, q_offset=i * qc, scale=scale)
+        return i + 1, out_blk
+
+    # checkpoint each chunk: backward recomputes that chunk's scores instead
+    # of stashing (n, b, h, qc, lk) fp32 probability tensors across chunks
+    step = jax.checkpoint(step, prevent_cse=False)
+    _, outs = jax.lax.scan(step, jnp.asarray(0, jnp.int32), xs)
+    # out head dim follows v (MLA: qk dim 192 vs v dim 128)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, lq, h, v.shape[-1])
+
+
+# =============================================================================
+# GQA
+# =============================================================================
+class KVCache(NamedTuple):
+    k: Array  # (B, S, Hk, hd) — S = min(seq, window) ring buffer
+    v: Array
+
+
+def gqa_init(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    d, h, hk = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, hk, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, hk, hd), d, dtype),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((hk, hd), dtype)
+        p["bv"] = jnp.zeros((hk, hd), dtype)
+    return p
+
+
+def gqa_specs(ax: Axes, cfg: ArchConfig) -> PyTree:
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    hq_ax = ax.dim_axis(h)
+    kv_ax = ax.dim_axis(hk)
+    # Weights shard on the HEAD axis only. Sharding head_dim instead would
+    # make every score einsum contract a sharded dim -> an all-reduce of the
+    # (b, h, lq, lk) score tensor per layer (observed: 1.9 GB/layer for
+    # qwen2). When heads don't divide the axis, replicate — attention
+    # weights are small and FSDP widening still shards d_model.
+    p = {
+        "wq": P(None, hq_ax, None),
+        "wk": P(None, kv_ax, None),
+        "wv": P(None, kv_ax, None),
+        "wo": P(hq_ax, None, None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(hq_ax, None)
+        p["bk"] = P(kv_ax, None)
+        p["bv"] = P(kv_ax, None)
+    return p
+
+
+def _project_qkv(params: PyTree, x: Array, cfg: ArchConfig):
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return q, k, v
+
+
+def gqa_forward(
+    params: PyTree,
+    x: Array,  # (B, L, d)
+    cfg: ArchConfig,
+    ax: Axes,
+    positions: Array | None = None,
+    use_flash: bool = False,
+) -> Array:
+    b, l, d = x.shape
+    h = cfg.num_heads
+    positions = jnp.arange(l) if positions is None else positions
+    q, k, v = _project_qkv(params, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # Head-parallel when heads divide the model axis. Otherwise SEQUENCE-
+    # parallel (§Perf iteration: qwen2's 14 heads don't divide 16; without
+    # this every model-axis device replicated the full attention — 16x
+    # wasted score FLOPs/HBM). Query rows shard over 'model'; k/v replicate
+    # (they're GQA-small); causal masking uses absolute indices so the
+    # chunked scan stays correct under a sharded L.
+    head_ax = ax.dim_axis(h)
+    seq_parallel = head_ax is None and ax.model_size > 1 and l % ax.model_size == 0
+    if seq_parallel:
+        q = shard(q, P(ax.b, ax.model, None, None))
+        # K/V must see the full sequence: gather THEM (GQA-small) rather
+        # than letting GSPMD gather the full residual stream
+        k = shard(k, P(ax.b, None, None, None))
+        v = shard(v, P(ax.b, None, None, None))
+    else:
+        q = shard(q, P(ax.b, None, head_ax, None))
+    if use_flash:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=True, window=cfg.window,
+        ).transpose(0, 2, 1, 3)
+    elif seq_parallel and l <= _CHUNK_THRESHOLD * 4:
+        # L-sharding already bounds live scores to (b, l/axis, h, l) — skip
+        # the q-chunk scan (its reshape would fight the sharded L axis)
+        out = _sdpa(q, k, v, causal=True, window=cfg.window)
+    else:
+        out = _sdpa_auto(q, k, v, causal=True, window=cfg.window)
+    if seq_parallel:
+        out = shard(out, P(ax.b, ax.model, None, None))
+    else:
+        out = shard(out, P(ax.b, None, head_ax, None))
+    return jnp.einsum("blhk,hkd->bld", out, params["wo"])
+
+
+def gqa_cache_init(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> KVCache:
+    s = min(seq_len, cfg.window) if cfg.window else seq_len
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    return KVCache(
+        k=jnp.zeros((batch, s, hk, hd), dtype), v=jnp.zeros((batch, s, hk, hd), dtype)
+    )
+
+
+def gqa_cache_specs(cfg: ArchConfig, ax: Axes) -> KVCache:
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    kv_pick = ax.pick(hk, hd)
+    spec = [None, None]
+    if kv_pick >= 0:
+        spec[kv_pick] = ax.model
+    return KVCache(k=P(ax.b, None, *spec), v=P(ax.b, None, *spec))
+
+
+def gqa_prefill(
+    params: PyTree, x: Array, cfg: ArchConfig, ax: Axes, cache_len: int | None = None
+) -> tuple[Array, KVCache]:
+    """Full-sequence forward that also returns the (ring-windowed) cache.
+
+    ``cache_len``: total decode capacity (>= l). Window archs get a ring
+    buffer of min(window, cache_len) slots aligned to ``slot = pos % s`` —
+    the same convention gqa_decode writes with.
+    """
+    b, l, _ = x.shape
+    cache_len = cache_len or l
+    positions = jnp.arange(l)
+    q, k, v = _project_qkv(params, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = _sdpa_auto(q, k, v, causal=True, window=cfg.window)
+    y = jnp.einsum("blhk,hkd->bld", out, params["wo"])
+    if cfg.window is not None:
+        s = min(cfg.window, cache_len)
+        tail_k, tail_v = k[:, max(l - s, 0) :], v[:, max(l - s, 0) :]
+        if l < s:  # pad up to ring size; slots >= l masked by kv_len
+            pad = ((0, 0), (0, s - l), (0, 0), (0, 0))
+            tail_k, tail_v = jnp.pad(tail_k, pad), jnp.pad(tail_v, pad)
+            cache = KVCache(k=tail_k, v=tail_v)
+        else:  # align ring: entry at absolute pos p lives in slot p % s
+            shift = l % s
+            cache = KVCache(k=jnp.roll(tail_k, shift, axis=1), v=jnp.roll(tail_v, shift, axis=1))
+    else:
+        pad = ((0, 0), (0, cache_len - l), (0, 0), (0, 0))
+        cache = KVCache(k=jnp.pad(k, pad), v=jnp.pad(v, pad))
+    return y, cache
+
+
+def gqa_decode(
+    params: PyTree,
+    x: Array,  # (B, 1, d)
+    cache: KVCache,
+    pos: Array,  # scalar int32 — absolute position of this token
+    cfg: ArchConfig,
+    ax: Axes,
+) -> tuple[Array, KVCache]:
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    posb = jnp.reshape(pos, (1,))
+    q = rope(q, posb, cfg.rope_theta)
+    k_new = rope(k_new, posb, cfg.rope_theta)
+    s = cache.k.shape[1]
+    slot = (pos % s) if cfg.window is not None else jnp.minimum(pos, s - 1)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    if cfg.window is not None:
+        # ring buffer: every slot valid once pos+1 >= s; RoPE phases are
+        # absolute so scores are position-correct without rotation.
+        kv_len = jnp.minimum(pos + 1, s)
+        out = _sdpa(q, k, v, causal=False, window=None, q_offset=pos, kv_len=kv_len)
+    else:
+        out = _sdpa(q, k, v, causal=False, window=None, q_offset=pos, kv_len=pos + 1)
+    y = jnp.einsum("blhk,hkd->bld", out, params["wo"])
+    return y, KVCache(k=k, v=v)
+
+
+# =============================================================================
+# MLA (DeepSeek-V2)
+# =============================================================================
+class MLACache(NamedTuple):
+    ckv: Array  # (B, S, kv_lora + rope_dim): latent ‖ roped shared key
+
+
+def mla_init(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), d, dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, qk_head), m.q_lora_rank, dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), d, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "wkv_b": dense_init(
+            ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim), m.kv_lora_rank, dtype
+        ),
+        "wo": dense_init(ks[4], (h, m.v_head_dim, d), h * m.v_head_dim, dtype),
+    }
+
+
+def mla_specs(ax: Axes, cfg: ArchConfig) -> PyTree:
+    h = cfg.num_heads
+    ha = ax.dim_axis(h)
+    return {
+        "wq_a": P(None, ax.dim_axis(cfg.mla.q_lora_rank)),
+        "q_norm": rmsnorm_specs(),
+        "wq_b": P(None, ha, None),
+        "wkv_a": P(None, None),
+        "kv_norm": rmsnorm_specs(),
+        "wkv_b": P(None, ha, None),
+        "wo": P(ha, None, None),
+    }
+
+
+def _mla_project(params: PyTree, x: Array, cfg: ArchConfig, positions: Array):
+    m = cfg.mla
+    nope, rdim = m.qk_nope_head_dim, m.qk_rope_head_dim
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"], cfg.norm_eps)
+    q = jnp.einsum("blr,rhk->blhk", q, params["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ params["wkv_a"]  # (B, L, kv_lora + rdim)
+    c_kv = rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(kv[..., m.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(
+    params: PyTree, x: Array, cfg: ArchConfig, ax: Axes, positions: Array | None = None
+) -> Array:
+    """Train/prefill: expand the latent and run standard MHA."""
+    m = cfg.mla
+    b, l, _ = x.shape
+    positions = jnp.arange(l) if positions is None else positions
+    q_nope, q_rope, c_kv, k_rope = _mla_project(params, x, cfg, positions)
+    kvb = jnp.einsum("blr,rhk->blhk", c_kv, params["wkv_b"])
+    k_nope, v = kvb[..., : m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim :]
+    h = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, l, h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q = shard(q, P(ax.b, None, ax.dim_axis(h), None))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = _sdpa_auto(q, k, v, causal=True, window=None, scale=scale)
+    out = shard(out, P(ax.b, None, ax.dim_axis(h), None))
+    return jnp.einsum("blhv,hvd->bld", out, params["wo"])
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, seq_len: int, dtype=jnp.bfloat16) -> MLACache:
+    m = cfg.mla
+    return MLACache(ckv=jnp.zeros((batch, seq_len, m.kv_lora_rank + m.qk_rope_head_dim), dtype))
+
+
+def mla_cache_specs(cfg: ArchConfig, ax: Axes) -> MLACache:
+    width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    return MLACache(ckv=P(ax.b, None, ax.dim_axis(width)))
+
+
+def mla_prefill(
+    params: PyTree, x: Array, cfg: ArchConfig, ax: Axes, cache_len: int | None = None
+) -> tuple[Array, MLACache]:
+    b, l, _ = x.shape
+    cache_len = cache_len or l
+    positions = jnp.arange(l)
+    y = mla_forward(params, x, cfg, ax, positions)
+    # recompute the latents for the cache (cheap projections)
+    kv = x @ params["wkv_a"]
+    c_kv = rmsnorm(params["kv_norm"], kv[..., : cfg.mla.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(kv[..., cfg.mla.kv_lora_rank :][:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    ckv = jnp.concatenate([c_kv, k_rope], axis=-1)
+    ckv = jnp.pad(ckv, ((0, 0), (0, cache_len - l), (0, 0)))
+    return y, MLACache(ckv=ckv)
+
+
+def mla_decode(
+    params: PyTree,
+    x: Array,  # (B, 1, d)
+    cache: MLACache,
+    pos: Array,
+    cfg: ArchConfig,
+    ax: Axes,
+) -> tuple[Array, MLACache]:
+    """Absorbed-matmul MLA decode: attention reads are against the 576-dim
+    latent, not H × head_dim expanded keys — DeepSeek-V2's KV-cache win."""
+    m = cfg.mla
+    nope, rdim, vdim = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    posb = jnp.reshape(pos, (1,))
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_project(params, x, cfg, posb)
+    new_entry = jnp.concatenate([c_kv_new, k_rope_new], axis=-1)  # (B, 1, 576)
+    ckv = jax.lax.dynamic_update_slice(cache.ckv, new_entry, (0, pos, 0))
+    c, kr = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    w_uk = params["wkv_b"][..., :nope]  # (r, h, nope)
+    w_uv = params["wkv_b"][..., nope:]  # (r, h, vdim)
+    # absorb W_UK into the query: q_c (B, 1, H, r)
+    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = (nope + rdim) ** -0.5
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_c.astype(jnp.float32), c.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))) * scale
+    kv_len = pos + 1
+    mask = jnp.arange(ckv.shape[1])[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhqs,bsr->bqhr", p, c.astype(jnp.float32)).astype(x.dtype)
+    ctx = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv)
+    y = jnp.einsum("bqhv,hvd->bqd", ctx, params["wo"])
+    return y, MLACache(ckv=ckv)

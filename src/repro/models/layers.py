@@ -1,0 +1,164 @@
+"""Shared layers + sharding helpers for the LM substrate.
+
+Sharding philosophy: params carry explicit PartitionSpec trees (built next
+to their initializers), activations get ``with_sharding_constraint`` at
+block boundaries. Logical axes:
+
+  batch  -> ('pod', 'data') on the multi-pod mesh, ('data',) single-pod
+  model  -> 'model' (TP / EP / head sharding)
+
+``dim_axis(size)`` returns 'model' only when `size` divides evenly over the
+model-axis length — GQA kv-heads (8 < 16) fall back to head-dim sharding or
+replication rather than producing invalid uneven shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical->physical axis environment for one mesh."""
+
+    batch: tuple[str, ...] = ("data",)  # ('pod','data') on multi-pod; () = replicated
+    model: str = "model"
+    model_size: int = 16  # devices along the model axis
+
+    @property
+    def b(self):
+        """Batch PartitionSpec entry: tuple of axes, or None when the batch
+        cannot shard (e.g. long_500k's global_batch=1)."""
+        return self.batch if self.batch else None
+
+    def dim_axis(self, size: int) -> str | None:
+        """'model' iff the dim shards evenly, else None (replicate)."""
+        return self.model if size % self.model_size == 0 else None
+
+    def pick(self, *dims: int) -> int:
+        """Index of the first dim that shards evenly; -1 if none."""
+        for i, d in enumerate(dims):
+            if d % self.model_size == 0:
+                return i
+        return -1
+
+
+def shard(x: Array, spec: P) -> Array:
+    """with_sharding_constraint that is a no-op outside jit/mesh contexts."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# -----------------------------------------------------------------------------
+# initializers — all fan-in scaled normal, deterministic per (key, path)
+# -----------------------------------------------------------------------------
+def dense_init(key: Array, shape: tuple[int, ...], fan_in: int | None = None, dtype=jnp.bfloat16) -> Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = fan_in**-0.5
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+# -----------------------------------------------------------------------------
+# RMSNorm
+# -----------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_specs() -> PyTree:
+    return {"scale": P(None)}
+
+
+def rmsnorm(params: PyTree, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+# -----------------------------------------------------------------------------
+# SwiGLU MLP (Megatron column/row TP pair)
+# -----------------------------------------------------------------------------
+def mlp_init(key: Array, d: int, d_ff: int, dtype=jnp.bfloat16) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, d_ff), d, dtype),
+        "w_up": dense_init(k2, (d, d_ff), d, dtype),
+        "w_down": dense_init(k3, (d_ff, d), d_ff, dtype),
+    }
+
+
+def mlp_specs(ax: Axes, d: int, d_ff: int, seq_sharded: bool = False) -> PyTree:
+    if seq_sharded:
+        # sequence-parallel residual: tokens shard over 'model', weights
+        # replicate (zero MLP collectives; right trade for small-d_ff archs
+        # whose heads don't divide the model axis)
+        return {"w_gate": P(None, None), "w_up": P(None, None), "w_down": P(None, None)}
+    ff = ax.dim_axis(d_ff)
+    return {
+        "w_gate": P(None, ff),  # column parallel
+        "w_up": P(None, ff),
+        "w_down": P(ff, None),  # row parallel (psum after)
+    }
+
+
+def mlp(params: PyTree, x: Array, ax: Axes, seq_sharded: bool = False) -> Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard(h, P(ax.b, ax.model, None) if seq_sharded else P(ax.b, None, ax.model))
+    return h @ params["w_down"]
+
+
+# -----------------------------------------------------------------------------
+# Embedding / LM head
+# -----------------------------------------------------------------------------
+def embedding_init(key: Array, vocab: int, d: int, tie: bool, dtype=jnp.bfloat16) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    p = {"table": embed_init(k1, vocab, d, dtype)}
+    if not tie:
+        p["lm_head"] = dense_init(k2, (d, vocab), d, dtype)
+    return p
+
+
+def embedding_specs(ax: Axes, vocab: int, tie: bool) -> PyTree:
+    v = ax.dim_axis(vocab)
+    p = {"table": P(v, None)}
+    if not tie:
+        p["lm_head"] = P(None, v)
+    return p
+
+
+def embed_tokens(params: PyTree, tokens: Array) -> Array:
+    return params["table"][tokens]
+
+
+def lm_logits(params: PyTree, x: Array, ax: Axes) -> Array:
+    """(B, L, d) -> (B, L, V), fp32 logits, vocab-sharded."""
+    if "lm_head" in params:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    else:
+        logits = x @ params["table"].astype(x.dtype).T
+    return shard(logits.astype(jnp.float32), P(ax.b, None, ax.model))
+
+
+def cross_entropy(logits: Array, labels: Array, ignore_id: int = -1) -> Array:
+    """Mean token NLL; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,185 @@
+"""Mamba selective-SSM block (Jamba's mixer) — train scan + decode step.
+
+Recurrence (per channel c, state dim n):
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t
+Training runs a `lax.scan` over time (sequential HLO loop; the chunked
+parallel form is a §Perf candidate); decode carries (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SSMConfig
+from .layers import Axes, dense_init
+
+Array = jax.Array
+PyTree = Any
+
+
+class MambaState(NamedTuple):
+    conv: Array  # (B, d_conv-1, d_in) — trailing inputs for the causal conv
+    ssm: Array  # (B, d_in, d_state)
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, s.d_state, s.d_conv, dt_rank
+
+
+def mamba_init(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    d = cfg.d_model
+    d_in, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), d, dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_in), d_conv, dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * d_state), d_in, dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dt_rank, dtype),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((d_in,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, d_state))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), d_in, dtype),
+    }
+
+
+def mamba_specs(ax: Axes, cfg: ArchConfig) -> PyTree:
+    d_in, d_state, _, dt_rank = _dims(cfg)
+    di = ax.dim_axis(d_in)
+    return {
+        "in_proj": P(None, ax.dim_axis(2 * d_in)),
+        "conv_w": P(None, di),
+        "conv_b": P(di),
+        "x_proj": P(di, None),
+        "dt_proj": P(None, di),
+        "dt_bias": P(di),
+        "a_log": P(di, None),
+        "d_skip": P(di),
+        "out_proj": P(di, None),
+    }
+
+
+def _conv_causal(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (B, L, d_in), w: (d_conv, d_in)."""
+    d_conv = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(d_conv))
+    return out + b
+
+
+_SSM_CHUNK = 16  # tokens per scan step (state stays VMEM-resident within)
+
+
+def _ssm_scan(xs: Array, dt: Array, b: Array, c: Array, a: Array, h0: Array):
+    """xs,(dt): (B, L, d_in); b,c: (B, L, n); a: (d_in, n); h0: (B, d_in, n).
+
+    Chunk-unrolled selective scan (§Perf, jamba): Mamba-1's decay is
+    per-(channel, state) so the RWKV-style matmul chunking doesn't apply,
+    but unrolling C tokens inside each scan body keeps the (B, d_in, n)
+    state out of HBM for C-1 of every C steps and loads the per-token
+    tensors one chunk at a time. Falls back to token-steps when C∤L.
+    """
+    l = xs.shape[1]
+    chunk = _SSM_CHUNK if l % _SSM_CHUNK == 0 else 1
+
+    def token_update(h, x_t, dt_t, b_t, c_t):
+        da = jnp.exp(dt_t[..., None] * a)  # (B, d_in, n)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    if chunk == 1:
+        def step(h, inp):
+            x_t, dt_t, b_t, c_t = inp
+            return token_update(h, x_t, dt_t, b_t, c_t)
+
+        inps = tuple(jnp.moveaxis(t, 1, 0) for t in (xs, dt, b, c))
+        h, ys = jax.lax.scan(step, h0, inps)
+        return h, jnp.moveaxis(ys, 0, 1)
+
+    n_chunks = l // chunk
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(t.shape[0], n_chunks, chunk, *t.shape[2:]), 1, 0
+    )
+    inps = tuple(resh(t) for t in (xs, dt, b, c))
+
+    def chunk_step(h, inp):
+        x_c, dt_c, b_c, c_c = inp  # (B, C, ...)
+        ys = []
+        for j in range(chunk):  # unrolled: h never round-trips HBM here
+            h, y = token_update(h, x_c[:, j], dt_c[:, j], b_c[:, j], c_c[:, j])
+            ys.append(y)
+        return h, jnp.stack(ys, axis=1)  # (B, C, d_in)
+
+    h, ys = jax.lax.scan(chunk_step, h0, inps)
+    ys = jnp.moveaxis(ys, 0, 1).reshape(xs.shape[0], l, -1)
+    return h, ys
+
+
+def _project(params: PyTree, u: Array, cfg: ArchConfig):
+    d_in, d_state, _, dt_rank = _dims(cfg)
+    xz = u @ params["in_proj"]  # (B, L, 2*d_in)
+    x, z = xz[..., :d_in], xz[..., d_in:]
+    return x, z, d_in, d_state, dt_rank
+
+
+def _ssm_params(params: PyTree, x: Array, d_state: int, dt_rank: int):
+    proj = x @ params["x_proj"]  # (B, L, dt_rank + 2n)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ params["dt_proj"] + params["dt_bias"]
+    ).astype(jnp.float32)
+    b = proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    c = proj[..., dt_rank + d_state :].astype(jnp.float32)
+    a = -jnp.exp(params["a_log"])
+    return dt, b, c, a
+
+
+def mamba_forward(params: PyTree, u: Array, cfg: ArchConfig, ax: Axes) -> Array:
+    """u: (B, L, d) -> (B, L, d)."""
+    x, z, d_in, d_state, dt_rank = _project(params, u, cfg)
+    x = jax.nn.silu(_conv_causal(x, params["conv_w"], params["conv_b"]))
+    dt, b, c, a = _ssm_params(params, x, d_state, dt_rank)
+    h0 = jnp.zeros((u.shape[0], d_in, d_state), jnp.float32)
+    _, y = _ssm_scan(x.astype(jnp.float32), dt, b, c, a, h0)
+    y = y + params["d_skip"] * x.astype(jnp.float32)
+    y = (y.astype(u.dtype)) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    d_in, d_state, d_conv, _ = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, d_conv - 1, d_in), dtype),
+        ssm=jnp.zeros((batch, d_in, d_state), jnp.float32),
+    )
+
+
+def mamba_state_specs(cfg: ArchConfig, ax: Axes) -> MambaState:
+    d_in, _, _, _ = _dims(cfg)
+    di = ax.dim_axis(d_in)
+    return MambaState(conv=P(ax.b, None, di), ssm=P(ax.b, di, None))
+
+
+def mamba_decode(
+    params: PyTree, u: Array, state: MambaState, cfg: ArchConfig, ax: Axes
+) -> tuple[Array, MambaState]:
+    """u: (B, 1, d) single-token step."""
+    x, z, d_in, d_state, dt_rank = _project(params, u, cfg)
+    # conv over [state.conv ‖ x]
+    window = jnp.concatenate([state.conv, x], axis=1)  # (B, d_conv, d_in)
+    xc = jnp.einsum("bld,ld->bd", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]  # (B, 1, d_in)
+    dt, b, c, a = _ssm_params(params, xc, d_state, dt_rank)
+    da = jnp.exp(dt[:, 0, :, None] * a)  # (B, d_in, n)
+    h = da * state.ssm + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b[:, 0][:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0]) + params["d_skip"] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None, :].astype(u.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, MambaState(conv=window[:, 1:], ssm=h)

@@ -1,0 +1,267 @@
+"""RWKV-6 (Finch) time-mix + channel-mix — attention-free mixer with
+data-dependent decay (the v6 hallmark: w_t is a low-rank function of x_t).
+
+Per head (k-dim = v-dim = head_size), state S (hs, hs):
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(w0 + lora(x_t)))
+
+Training scans over time; decode carries (x_prev, S). Channel-mix is the
+RWKV squared-ReLU FFN (the config's d_ff).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RWKVConfig
+from .layers import Axes, dense_init
+
+Array = jax.Array
+PyTree = Any
+
+
+class RWKVState(NamedTuple):
+    x_prev_tm: Array  # (B, d) last input to time-mix (token shift)
+    x_prev_cm: Array  # (B, d) last input to channel-mix
+    s: Array  # (B, H, hs, hs) wkv state, fp32
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    r: RWKVConfig = cfg.rwkv or RWKVConfig()
+    hs = r.head_size
+    nh = cfg.d_model // hs
+    return nh, hs, r.decay_lora
+
+
+def rwkv_time_mix_init(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    d = cfg.d_model
+    nh, hs, lora = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_v": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_g": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_w": 0.5 * jnp.ones((d,), jnp.float32),
+        "wr": dense_init(ks[0], (d, d), d, dtype),
+        "wk": dense_init(ks[1], (d, d), d, dtype),
+        "wv": dense_init(ks[2], (d, d), d, dtype),
+        "wg": dense_init(ks[3], (d, d), d, dtype),
+        "wo": dense_init(ks[4], (d, d), d, dtype),
+        # data-dependent decay: w0 + tanh(x W_a) W_b
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),
+        "w_a": dense_init(ks[5], (d, lora), d, jnp.float32),
+        "w_b": dense_init(ks[6], (lora, d), lora, jnp.float32),
+        "u": jnp.zeros((nh, hs), jnp.float32),  # per-head bonus
+        "ln_scale": jnp.ones((nh, hs), jnp.float32),  # per-head output norm
+    }
+
+
+def rwkv_time_mix_specs(ax: Axes, cfg: ArchConfig) -> PyTree:
+    d = cfg.d_model
+    da = ax.dim_axis(d)
+    return {
+        "mix_r": P(None), "mix_k": P(None), "mix_v": P(None), "mix_g": P(None), "mix_w": P(None),
+        "wr": P(None, da), "wk": P(None, da), "wv": P(None, da), "wg": P(None, da),
+        "wo": P(da, None),
+        "w0": P(None), "w_a": P(None, None), "w_b": P(None, None),
+        "u": P(ax.dim_axis(_dims(cfg)[0]), None),
+        "ln_scale": P(ax.dim_axis(_dims(cfg)[0]), None),
+    }
+
+
+def _mix(x: Array, x_prev: Array, mu: Array) -> Array:
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _decay(params: PyTree, xw: Array) -> Array:
+    """w_t in (0,1): exp(-exp(w0 + tanh(x W_a) W_b)), fp32."""
+    lo = jnp.tanh(xw.astype(jnp.float32) @ params["w_a"]) @ params["w_b"]
+    return jnp.exp(-jnp.exp(params["w0"] + lo))
+
+
+def _head_norm(params: PyTree, out: Array, eps: float = 1e-5) -> Array:
+    """Per-head RMS norm of the wkv output. out: (..., H, hs), fp32."""
+    var = jnp.mean(out * out, axis=-1, keepdims=True)
+    return out * jax.lax.rsqrt(var + eps) * params["ln_scale"]
+
+
+_WKV_CHUNK = 16  # tokens per parallel chunk (C x C score blocks)
+# fp32 safety floor for the per-chunk cumulative log decay. The factored
+# r~/k~ form is exact while |per-chunk log-decay span| < 25 nats, i.e.
+# per-step decay >= e^{-25/16} ~ 0.21 — covers trained RWKV-6 ranges; the
+# state recurrence across chunks multiplies by e^{lw_last} <= 1 and is
+# unconditionally stable. Pairs separated by > 25 nats of decay contribute
+# < e^-25 in exact math.
+_LOG_DECAY_CLAMP = -25.0
+
+
+def _wkv_naive(rh, kh, vh, wh, u, s0):
+    """Reference recurrence: one lax.scan step per token (O(L) HBM round
+    trips on the state — the memory-bound baseline)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # each (B, H, hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, hs, hs)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, out
+
+    inps = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
+    s, outs = jax.lax.scan(step, s0, inps)
+    return s, jnp.moveaxis(outs, 0, 1)  # (B, L, H, hs)
+
+
+def _wkv_chunked(rh, kh, vh, wh, u, s0, chunk: int = _WKV_CHUNK):
+    """Chunk-parallel WKV (§Perf iteration 1): the state crosses HBM once
+    per chunk instead of once per token; within-chunk work is C x C matmuls.
+
+    With lw_i = sum_{j<=i} log w_j (cumulative log decay inside the chunk):
+      out_i   = (r_i * e^{lw_{i-1}}) S_prev
+              + sum_{j<i} (r_i . (k_j * e^{lw_{i-1}-lw_j})) v_j
+              + (r_i . (u * k_i)) v_i
+      S_next  = e^{lw_last} S_prev + sum_j (k_j e^{lw_last - lw_j}) v_j^T
+    Exponents are <= 0 for j <= i-1, and lw is clamped so the k-side
+    e^{-lw_j} factor stays inside fp32 (standard GLA/FLA chunking).
+    """
+    b, l, nh, hs = rh.shape
+    assert l % chunk == 0, (l, chunk)
+    n = l // chunk
+    resh = lambda a: jnp.moveaxis(a.reshape(b, n, chunk, nh, hs), 1, 0)
+    rc, kc, vc, wc = resh(rh), resh(kh), resh(vh), resh(wh)  # (n, B, C, H, hs)
+
+    def one_chunk(s, inp):
+        r, k, v, w = inp  # (B, C, H, hs)
+        lw = jnp.cumsum(jnp.log(jnp.maximum(w, 1e-38)), axis=1)  # (B, C, H, hs)
+        lw = jnp.maximum(lw, _LOG_DECAY_CLAMP)
+        lw_prev = jnp.pad(lw, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]  # lw_{i-1}
+        lw_last = lw[:, -1:]  # (B, 1, H, hs)
+        r_dec = r * jnp.exp(lw_prev)  # r~_i
+        k_dec = k * jnp.exp(-lw)  # k~_j
+        # inter-chunk contribution + intra-chunk lower-triangular attention
+        out_state = jnp.einsum("bchk,bhkv->bchv", r_dec, s)
+        scores = jnp.einsum("bihk,bjhk->bhij", r_dec, k_dec)  # (B, H, C, C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+        scores = scores * tri[None, None]
+        out_intra = jnp.einsum("bhij,bjhv->bihv", scores, v)
+        out_diag = jnp.einsum("bchk,bchk->bch", r, u[None, None] * k)[..., None] * v
+        out = out_state + out_intra + out_diag
+        # state update
+        k_fwd = k * jnp.exp(lw_last - lw)  # k_j e^{lw_last - lw_j}
+        s_new = jnp.exp(lw_last[:, 0])[..., None] * s + jnp.einsum(
+            "bchk,bchv->bhkv", k_fwd, v
+        )
+        return s_new, out
+
+    s, outs = jax.lax.scan(one_chunk, s0, (rc, kc, vc, wc))
+    return s, jnp.moveaxis(outs, 0, 1).reshape(b, l, nh, hs)
+
+
+def rwkv_time_mix(
+    params: PyTree, x: Array, cfg: ArchConfig, ax: Axes, chunked: bool = True
+) -> Array:
+    """x: (B, L, d) -> (B, L, d). Chunk-parallel WKV when L allows."""
+    b, l, d = x.shape
+    nh, hs, _ = _dims(cfg)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # token shift
+    r = _mix(x, x_prev, params["mix_r"]) @ params["wr"]
+    k = _mix(x, x_prev, params["mix_k"]) @ params["wk"]
+    v = _mix(x, x_prev, params["mix_v"]) @ params["wv"]
+    g = jax.nn.silu(_mix(x, x_prev, params["mix_g"]) @ params["wg"])
+    w = _decay(params, _mix(x, x_prev, params["mix_w"]))  # (B, L, d) fp32
+
+    rh = r.reshape(b, l, nh, hs).astype(jnp.float32)
+    kh = k.reshape(b, l, nh, hs).astype(jnp.float32)
+    vh = v.reshape(b, l, nh, hs).astype(jnp.float32)
+    wh = w.reshape(b, l, nh, hs)
+    u = params["u"]
+    s0 = jnp.zeros((b, nh, hs, hs), jnp.float32)
+    if chunked and l % _WKV_CHUNK == 0:
+        _, out = _wkv_chunked(rh, kh, vh, wh, u, s0)
+    else:
+        _, out = _wkv_naive(rh, kh, vh, wh, u, s0)
+    out = _head_norm(params, out).reshape(b, l, d).astype(x.dtype)
+    return (out * g) @ params["wo"]
+
+
+def rwkv_channel_mix_init(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> PyTree:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "wk": dense_init(ks[0], (d, dff), d, dtype),
+        "wv": dense_init(ks[1], (dff, d), dff, dtype),
+        "wr": dense_init(ks[2], (d, d), d, dtype),
+    }
+
+
+def rwkv_channel_mix_specs(ax: Axes, cfg: ArchConfig) -> PyTree:
+    ff = ax.dim_axis(cfg.d_ff)
+    return {
+        "mix_k": P(None), "mix_r": P(None),
+        "wk": P(None, ff), "wv": P(ff, None), "wr": P(None, ax.dim_axis(cfg.d_model)),
+    }
+
+
+def rwkv_channel_mix(params: PyTree, x: Array, x_prev: Array | None = None) -> Array:
+    """Squared-ReLU FFN with token shift. x: (B, L, d)."""
+    if x_prev is None:
+        xp = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xp = jnp.concatenate([x_prev[:, None], x], axis=1)[:, :-1]
+    k = _mix(x, xp, params["mix_k"]) @ params["wk"]
+    kv = (jax.nn.relu(k) ** 2) @ params["wv"]
+    r = jax.nn.sigmoid(_mix(x, xp, params["mix_r"]) @ params["wr"])
+    return r * kv
+
+
+def rwkv_state_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    nh, hs, _ = _dims(cfg)
+    d = cfg.d_model
+    return RWKVState(
+        x_prev_tm=jnp.zeros((batch, d), dtype),
+        x_prev_cm=jnp.zeros((batch, d), dtype),
+        s=jnp.zeros((batch, nh, hs, hs), jnp.float32),
+    )
+
+
+def rwkv_state_specs(cfg: ArchConfig, ax: Axes) -> RWKVState:
+    nh, _, _ = _dims(cfg)
+    return RWKVState(
+        x_prev_tm=P(ax.b, None),
+        x_prev_cm=P(ax.b, None),
+        s=P(ax.b, ax.dim_axis(nh), None, None),
+    )
+
+
+def rwkv_decode(
+    tm_params: PyTree,
+    cm_params: PyTree,
+    x_tm: Array,  # (B, 1, d) input to time-mix (post-norm)
+    state: RWKVState,
+    cfg: ArchConfig,
+) -> tuple[Array, Array, RWKVState]:
+    """Single-token step. Returns (time_mix_out, new_x_prev_tm_consumed_flag)
+    — channel-mix is applied by the caller with state.x_prev_cm."""
+    b, _, d = x_tm.shape
+    nh, hs, _ = _dims(cfg)
+    xp = state.x_prev_tm[:, None]
+    r = _mix(x_tm, xp, tm_params["mix_r"]) @ tm_params["wr"]
+    k = _mix(x_tm, xp, tm_params["mix_k"]) @ tm_params["wk"]
+    v = _mix(x_tm, xp, tm_params["mix_v"]) @ tm_params["wv"]
+    g = jax.nn.silu(_mix(x_tm, xp, tm_params["mix_g"]) @ tm_params["wg"])
+    w = _decay(tm_params, _mix(x_tm, xp, tm_params["mix_w"]))[:, 0].reshape(b, nh, hs)
+    r_t = r[:, 0].reshape(b, nh, hs).astype(jnp.float32)
+    k_t = k[:, 0].reshape(b, nh, hs).astype(jnp.float32)
+    v_t = v[:, 0].reshape(b, nh, hs).astype(jnp.float32)
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r_t, state.s + tm_params["u"][..., None] * kv)
+    s_new = w[..., None] * state.s + kv
+    out = _head_norm(tm_params, out[:, None]).reshape(b, 1, d).astype(x_tm.dtype)
+    y = (out * g) @ tm_params["wo"]
+    new_state = RWKVState(x_prev_tm=x_tm[:, 0], x_prev_cm=state.x_prev_cm, s=s_new)
+    return y, new_state

@@ -1,0 +1,540 @@
+"""Config-driven decoder stack: uniform, MoE, hybrid (Jamba) and attention-
+free (RWKV) architectures under one scan-over-layers implementation.
+
+Layers are grouped into *segments* of identical structure; each segment's
+params are stacked (leading repeat dim) and executed with ``lax.scan`` +
+optional ``jax.checkpoint`` — the HLO holds ONE copy of each distinct layer
+structure regardless of depth (llama3-405b's 126 layers compile as one
+scanned body), which is what keeps the 80-cell dry-run tractable and remat
+behaviour explicit.
+
+Segments:
+  * uniform archs              -> [(L, (layer,))]
+  * deepseek (first-dense)     -> [(1, (dense_layer,)), (L-1, (moe_layer,))]
+  * jamba (period-8 pattern)   -> [(L/8, (8 distinct sublayers,))]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from . import mamba as mam
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from .layers import (
+    Axes,
+    cross_entropy,
+    embed_tokens,
+    embedding_init,
+    embedding_specs,
+    lm_logits,
+    mlp,
+    mlp_init,
+    mlp_specs,
+    rmsnorm,
+    rmsnorm_init,
+    rmsnorm_specs,
+    shard,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str  # "a" (attention) | "m" (mamba) | "r" (rwkv)
+    ffn: str  # "dense" | "moe" | "rwkv"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    repeat: int
+    layers: tuple[LayerDesc, ...]
+
+
+def seq_sharded_mode(cfg: ArchConfig, ax: Axes) -> bool:
+    """Sequence-parallel residual stream: used when attention heads do NOT
+    divide the model axis (qwen2 14H, llama3.2 24H over 16) — the head-
+    sharding fallback would otherwise replicate attention across the axis.
+    Tokens shard over 'model'; MLP weights replicate; only K/V all-gather.
+    (§Perf iterations 2-3.)"""
+    return (
+        cfg.attention == "gqa"
+        and cfg.num_heads > 0
+        and ax.model_size > 1
+        and cfg.num_heads % ax.model_size != 0
+        and cfg.d_model % ax.model_size == 0
+    )
+
+
+def build_segments(cfg: ArchConfig) -> tuple[Segment, ...]:
+    pattern = cfg.pattern()
+    moe_mask = cfg.moe_layer_mask()
+    descs = []
+    for i, kind in enumerate(pattern):
+        if kind == "r":
+            ffn = "rwkv"
+        elif moe_mask[i]:
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        descs.append(LayerDesc(kind, ffn))
+    # greedy grouping: find smallest period that tiles the remaining layers
+    n = len(descs)
+    segments: list[Segment] = []
+    i = 0
+    # special-case leading non-repeating prefix (deepseek first-dense)
+    while i < n:
+        # pick the period with the most repeats (tie -> smallest period):
+        # uniform stacks collapse to one scanned body; a non-repeating
+        # prefix (deepseek's first dense layer) becomes its own segment.
+        best = (0, None)
+        for period in (1, 2, 4, 8, 16):
+            if period > n - i:
+                break
+            blk = tuple(descs[i : i + period])
+            reps = 0
+            j = i
+            while j + period <= n and tuple(descs[j : j + period]) == blk:
+                reps += 1
+                j += period
+            if reps > best[0]:
+                best = (reps, blk)
+        reps, blk = best
+        segments.append(Segment(reps, blk))
+        i += reps * len(blk)
+    return tuple(segments)
+
+
+# -----------------------------------------------------------------------------
+# single layer
+# -----------------------------------------------------------------------------
+def _mixer_init(key, cfg: ArchConfig, desc: LayerDesc, dtype):
+    if desc.mixer == "a":
+        return attn.mla_init(key, cfg, dtype) if cfg.attention == "mla" else attn.gqa_init(key, cfg, dtype)
+    if desc.mixer == "m":
+        return mam.mamba_init(key, cfg, dtype)
+    return rwkv_mod.rwkv_time_mix_init(key, cfg, dtype)
+
+
+def _mixer_specs(ax, cfg: ArchConfig, desc: LayerDesc):
+    if desc.mixer == "a":
+        return attn.mla_specs(ax, cfg) if cfg.attention == "mla" else attn.gqa_specs(ax, cfg)
+    if desc.mixer == "m":
+        return mam.mamba_specs(ax, cfg)
+    return rwkv_mod.rwkv_time_mix_specs(ax, cfg)
+
+
+def _ffn_init(key, cfg: ArchConfig, desc: LayerDesc, dtype):
+    if desc.ffn == "moe":
+        return moe_mod.moe_init(key, cfg, dtype)
+    if desc.ffn == "rwkv":
+        return rwkv_mod.rwkv_channel_mix_init(key, cfg, dtype)
+    return mlp_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _ffn_specs(ax, cfg: ArchConfig, desc: LayerDesc):
+    if desc.ffn == "moe":
+        return moe_mod.moe_specs(ax, cfg)
+    if desc.ffn == "rwkv":
+        return rwkv_mod.rwkv_channel_mix_specs(ax, cfg)
+    return mlp_specs(ax, cfg.d_model, cfg.d_ff, seq_sharded=seq_sharded_mode(cfg, ax))
+
+
+def layer_init(key, cfg: ArchConfig, desc: LayerDesc, dtype=jnp.bfloat16) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "mixer": _mixer_init(k1, cfg, desc, dtype),
+        "norm2": rmsnorm_init(cfg.d_model),
+        "ffn": _ffn_init(k2, cfg, desc, dtype),
+    }
+
+
+def layer_specs(ax, cfg: ArchConfig, desc: LayerDesc) -> PyTree:
+    return {
+        "norm1": rmsnorm_specs(),
+        "mixer": _mixer_specs(ax, cfg, desc),
+        "norm2": rmsnorm_specs(),
+        "ffn": _ffn_specs(ax, cfg, desc),
+    }
+
+
+def layer_forward(
+    params: PyTree,
+    x: Array,
+    cfg: ArchConfig,
+    ax: Axes,
+    desc: LayerDesc,
+    use_flash: bool = False,
+    shard_residual: bool = False,
+) -> tuple[Array, Array]:
+    """Full-sequence layer. Returns (x, moe_aux_sum)."""
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if desc.mixer == "a":
+        if cfg.attention == "mla":
+            mix = attn.mla_forward(params["mixer"], h, cfg, ax)
+        else:
+            mix = attn.gqa_forward(params["mixer"], h, cfg, ax, use_flash=use_flash)
+    elif desc.mixer == "m":
+        mix = mam.mamba_forward(params["mixer"], h, cfg, ax)
+    else:
+        mix = rwkv_mod.rwkv_time_mix(params["mixer"], h, cfg, ax)
+    seqsh = desc.mixer == "a" and seq_sharded_mode(cfg, ax) and x.shape[1] % ax.model_size == 0
+    if seqsh:
+        lspec = P(ax.b, ax.model, None)
+    elif shard_residual:
+        lspec = P(ax.b, None, ax.model)
+    else:
+        lspec = P(ax.b, None, None)
+    x = x + mix
+    x = shard(x, lspec)
+    h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if desc.ffn == "moe":
+        out, moe_aux = moe_mod.moe_ffn(params["ffn"], h2, cfg, ax)
+        m = cfg.moe
+        aux = m.router_aux_weight * moe_aux.load_balance + m.router_z_weight * moe_aux.z_loss
+    elif desc.ffn == "rwkv":
+        out = rwkv_mod.rwkv_channel_mix(params["ffn"], h2)
+    else:
+        out = mlp(params["ffn"], h2, ax, seq_sharded=seqsh)
+    x = x + out
+    return shard(x, lspec), aux
+
+
+# -----------------------------------------------------------------------------
+# caches (decode)
+# -----------------------------------------------------------------------------
+def layer_cache_init(cfg: ArchConfig, desc: LayerDesc, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    if desc.mixer == "a":
+        if cfg.attention == "mla":
+            return attn.mla_cache_init(cfg, batch, seq_len, dtype)
+        return attn.gqa_cache_init(cfg, batch, seq_len, dtype)
+    if desc.mixer == "m":
+        return mam.mamba_state_init(cfg, batch, dtype)
+    return rwkv_mod.rwkv_state_init(cfg, batch, dtype)
+
+
+def layer_cache_specs(cfg: ArchConfig, desc: LayerDesc, ax: Axes):
+    if desc.mixer == "a":
+        if cfg.attention == "mla":
+            return attn.mla_cache_specs(cfg, ax)
+        return attn.gqa_cache_specs(cfg, ax)
+    if desc.mixer == "m":
+        return mam.mamba_state_specs(cfg, ax)
+    return rwkv_mod.rwkv_state_specs(cfg, ax)
+
+
+def layer_decode(
+    params: PyTree,
+    x: Array,
+    cache,
+    pos: Array,
+    cfg: ArchConfig,
+    ax: Axes,
+    desc: LayerDesc,
+):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if desc.mixer == "a":
+        if cfg.attention == "mla":
+            mix, cache = attn.mla_decode(params["mixer"], h, cache, pos, cfg, ax)
+        else:
+            mix, cache = attn.gqa_decode(params["mixer"], h, cache, pos, cfg, ax)
+    elif desc.mixer == "m":
+        mix, cache = mam.mamba_decode(params["mixer"], h, cache, cfg, ax)
+    else:
+        mix, cache = rwkv_mod.rwkv_decode(params["mixer"], params["ffn"], h, cache, cfg)
+    x = x + mix
+    h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if desc.ffn == "moe":
+        out, _ = moe_mod.moe_ffn(params["ffn"], h2, cfg, ax, capacity_factor=2.0)
+    elif desc.ffn == "rwkv":
+        out = rwkv_mod.rwkv_channel_mix(params["ffn"], h2, x_prev=cache.x_prev_cm)
+        cache = cache._replace(x_prev_cm=h2[:, 0])
+    else:
+        out = mlp(params["ffn"], h2, ax)
+    return x + out, cache
+
+
+def layer_prefill(
+    params: PyTree,
+    x: Array,
+    cfg: ArchConfig,
+    ax: Axes,
+    desc: LayerDesc,
+    cache_len: int | None = None,
+):
+    """Full-seq forward that also emits the decode cache for this layer."""
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if desc.mixer == "a":
+        if cfg.attention == "mla":
+            mix, cache = attn.mla_prefill(params["mixer"], h, cfg, ax, cache_len)
+        else:
+            mix, cache = attn.gqa_prefill(params["mixer"], h, cfg, ax, cache_len)
+    elif desc.mixer == "m":
+        b = x.shape[0]
+        st0 = mam.mamba_state_init(cfg, b, x.dtype)
+        mix = mam.mamba_forward(params["mixer"], h, cfg, ax)
+        # final SSM/conv state: recompute cheaply from the tail of the seq
+        d_conv = (cfg.ssm.d_conv if cfg.ssm else 4)
+        xz = h @ params["mixer"]["in_proj"]
+        d_in = xz.shape[-1] // 2
+        xs = xz[..., :d_in]
+        conv_tail = xs[:, -(d_conv - 1) :, :]
+        st = mam.MambaState(conv=conv_tail.astype(st0.conv.dtype), ssm=_mamba_final_state(params["mixer"], h, cfg))
+        cache = st
+    else:
+        b = x.shape[0]
+        mix = rwkv_mod.rwkv_time_mix(params["mixer"], h, cfg, ax)
+        cache = rwkv_mod.RWKVState(
+            x_prev_tm=h[:, -1],
+            x_prev_cm=jnp.zeros_like(h[:, -1]),
+            s=_rwkv_final_state(params["mixer"], h, cfg),
+        )
+    x = x + mix
+    h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if desc.ffn == "moe":
+        out, _ = moe_mod.moe_ffn(params["ffn"], h2, cfg, ax, capacity_factor=2.0)
+    elif desc.ffn == "rwkv":
+        out = rwkv_mod.rwkv_channel_mix(params["ffn"], h2)
+        cache = cache._replace(x_prev_cm=h2[:, -1])
+    else:
+        out = mlp(params["ffn"], h2, ax)
+    return x + out, cache
+
+
+def _mamba_final_state(mixer: PyTree, h: Array, cfg: ArchConfig) -> Array:
+    """Final SSM state after the full sequence (re-runs the scan carry)."""
+    x, z, d_in, d_state, dt_rank = mam._project(mixer, h, cfg)
+    x = jax.nn.silu(mam._conv_causal(x, mixer["conv_w"], mixer["conv_b"]))
+    dt, b, c, a = mam._ssm_params(mixer, x, d_state, dt_rank)
+    h0 = jnp.zeros((h.shape[0], d_in, d_state), jnp.float32)
+    hf, _ = mam._ssm_scan(x.astype(jnp.float32), dt, b, c, a, h0)
+    return hf
+
+
+def _rwkv_final_state(mixer: PyTree, h: Array, cfg: ArchConfig) -> Array:
+    b, l, d = h.shape
+    nh, hs, _ = rwkv_mod._dims(cfg)
+    x_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    k = rwkv_mod._mix(h, x_prev, mixer["mix_k"]) @ mixer["wk"]
+    v = rwkv_mod._mix(h, x_prev, mixer["mix_v"]) @ mixer["wv"]
+    w = rwkv_mod._decay(mixer, rwkv_mod._mix(h, x_prev, mixer["mix_w"]))
+    kh = k.reshape(b, l, nh, hs).astype(jnp.float32)
+    vh = v.reshape(b, l, nh, hs).astype(jnp.float32)
+    wh = w.reshape(b, l, nh, hs)
+    rh = jnp.zeros_like(kh)  # receptance unused for the state
+    s0 = jnp.zeros((b, nh, hs, hs), jnp.float32)
+    if l % rwkv_mod._WKV_CHUNK == 0:
+        sf, _ = rwkv_mod._wkv_chunked(rh, kh, vh, wh, mixer["u"], s0)
+    else:
+        sf, _ = rwkv_mod._wkv_naive(rh, kh, vh, wh, mixer["u"], s0)
+    return sf
+
+
+# -----------------------------------------------------------------------------
+# the model
+# -----------------------------------------------------------------------------
+class Model:
+    """Functional model bound to (cfg, axes). Params/caches are pytrees."""
+
+    def __init__(self, cfg: ArchConfig, ax: Axes | None = None, remat: str = "full",
+                 use_flash: bool = False, dtype=jnp.bfloat16, shard_residual: bool = False,
+                 remat_group: int = 1):
+        self.cfg = cfg
+        self.ax = ax or Axes(batch=("data",), model="model", model_size=1)
+        self.segments = build_segments(cfg)
+        assert sum(s.repeat * len(s.layers) for s in self.segments) == cfg.num_layers
+        self.remat = remat
+        self.use_flash = use_flash
+        self.dtype = dtype
+        # §Perf (llama3-405b, iteration A — REFUTED, kept for ablation):
+        # sharding the residual stream over 'model' cut the remat stash 16x
+        # but added a larger volume of per-matmul activation all-gathers.
+        self.shard_residual = (
+            shard_residual
+            and cfg.d_model % self.ax.model_size == 0
+            and not seq_sharded_mode(cfg, self.ax)
+        )
+        # §Perf iteration C: checkpoint every `remat_group` layers instead
+        # of every layer — stash shrinks by g at ~(g-1)/g extra fwd
+        # recompute of grouped layers' peers (weight gathers unchanged).
+        self.remat_group = max(1, remat_group)
+
+    # ---- init / specs ---------------------------------------------------------
+    def init(self, key: Array) -> PyTree:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.segments) + 1)
+        p: dict[str, Any] = {
+            "embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model, cfg.tie_embeddings, self.dtype),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        for si, seg in enumerate(self.segments):
+            def one(k):
+                lks = jax.random.split(k, len(seg.layers))
+                return {f"l{i}": layer_init(lks[i], cfg, d, self.dtype) for i, d in enumerate(seg.layers)}
+
+            seg_keys = jax.random.split(keys[si + 1], seg.repeat)
+            p[f"seg{si}"] = jax.vmap(one)(seg_keys)
+        return p
+
+    def param_specs(self) -> PyTree:
+        cfg, ax = self.cfg, self.ax
+        p: dict[str, Any] = {
+            "embed": embedding_specs(ax, cfg.vocab_size, cfg.tie_embeddings),
+            "final_norm": rmsnorm_specs(),
+        }
+        for si, seg in enumerate(self.segments):
+            seg_spec = {
+                f"l{i}": layer_specs(ax, cfg, d) for i, d in enumerate(seg.layers)
+            }
+            # stacked leading repeat dim -> prepend None to every spec
+            p[f"seg{si}"] = jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), seg_spec,
+                is_leaf=lambda s: isinstance(s, P),
+            )
+        return p
+
+    # ---- forward --------------------------------------------------------------
+    def _segment_body(self, seg: Segment, group: int = 1):
+        cfg, ax = self.cfg, self.ax
+
+        def apply_layers(carry, seg_params):
+            x, aux = carry
+            for i, d in enumerate(seg.layers):
+                x, a = layer_forward(seg_params[f"l{i}"], x, cfg, ax, d, self.use_flash,
+                                     self.shard_residual)
+                aux = aux + a
+            return (x, aux), ()
+
+        if group == 1:
+            body = apply_layers
+        else:
+            # nested remat: the group checkpoint bounds the stash to one
+            # entry per g layers; the inner per-layer checkpoints bound the
+            # group-backward working set to ONE layer's intermediates
+            inner = jax.checkpoint(apply_layers, prevent_cse=False)
+
+            def body(carry, grouped):
+                for j in range(group):
+                    carry, _ = inner(carry, jax.tree.map(lambda a: a[j], grouped))
+                return carry, ()
+
+        if self.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif self.remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                prevent_cse=False,
+            )
+        return body
+
+    def backbone(self, params: PyTree, x: Array) -> tuple[Array, Array]:
+        """(B, L, d) -> (hidden, moe_aux)."""
+        aux = jnp.zeros((), jnp.float32)
+        for si, seg in enumerate(self.segments):
+            # largest divisor of the stack depth <= requested group size
+            g = max(d for d in range(1, self.remat_group + 1) if seg.repeat % d == 0)
+            seg_params = params[f"seg{si}"]
+            if g > 1:
+                seg_params = jax.tree.map(
+                    lambda a: a.reshape(a.shape[0] // g, g, *a.shape[1:]), seg_params
+                )
+            body = self._segment_body(seg, group=g)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), seg_params)
+        return rmsnorm(params["final_norm"], x, self.cfg.norm_eps), aux
+
+    def embed_input(self, params: PyTree, batch: dict[str, Array]) -> Array:
+        if self.cfg.input_mode == "embeddings" and "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"])
+        if seq_sharded_mode(self.cfg, self.ax) and x.shape[1] % self.ax.model_size == 0:
+            return shard(x, P(self.ax.b, self.ax.model, None))
+        if self.shard_residual:
+            return shard(x, P(self.ax.b, None, self.ax.model))
+        return shard(x, P(self.ax.b, None, None))
+
+    def loss_fn(self, params: PyTree, batch: dict[str, Array]) -> Array:
+        x = self.embed_input(params, batch)
+        h, aux = self.backbone(params, x)
+        logits = lm_logits(params["embed"], h, self.ax)
+        return cross_entropy(logits, batch["labels"]) + aux
+
+    # ---- prefill / decode -----------------------------------------------------
+    def cache_init(self, batch: int, seq_len: int) -> PyTree:
+        caches = {}
+        for si, seg in enumerate(self.segments):
+            def one(_):
+                return {
+                    f"l{i}": layer_cache_init(self.cfg, d, batch, seq_len, self.dtype)
+                    for i, d in enumerate(seg.layers)
+                }
+
+            caches[f"seg{si}"] = jax.vmap(one)(jnp.arange(seg.repeat))
+        return caches
+
+    def cache_specs(self) -> PyTree:
+        out = {}
+        for si, seg in enumerate(self.segments):
+            seg_spec = {
+                f"l{i}": layer_cache_specs(self.cfg, d, self.ax) for i, d in enumerate(seg.layers)
+            }
+            out[f"seg{si}"] = jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), seg_spec,
+                is_leaf=lambda s: isinstance(s, P),
+            )
+        return out
+
+    def prefill(
+        self, params: PyTree, batch: dict[str, Array], cache_len: int | None = None
+    ) -> tuple[Array, PyTree]:
+        """Returns (last-token logits, caches with `cache_len` decode capacity)."""
+        x = self.embed_input(params, batch)
+        caches = {}
+        for si, seg in enumerate(self.segments):
+            def body(x, seg_params):
+                new_caches = {}
+                for i, d in enumerate(seg.layers):
+                    x, c = layer_prefill(seg_params[f"l{i}"], x, self.cfg, self.ax, d, cache_len)
+                    new_caches[f"l{i}"] = c
+                return x, new_caches
+
+            x, caches[f"seg{si}"] = jax.lax.scan(body, x, params[f"seg{si}"])
+        h = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        logits = lm_logits(params["embed"], h[:, -1:], self.ax)
+        return logits, caches
+
+    def decode_step(
+        self, params: PyTree, caches: PyTree, tokens: Array, pos: Array
+    ) -> tuple[Array, PyTree]:
+        """tokens: (B, 1) int32; pos: scalar int32. Returns (logits, caches)."""
+        x = embed_tokens(params["embed"], tokens)
+        x = shard(x, P(self.ax.b, None, None))
+        new_caches = {}
+        for si, seg in enumerate(self.segments):
+            def body(x, scan_in):
+                seg_params, cache = scan_in
+                new_cache = {}
+                for i, d in enumerate(seg.layers):
+                    x, c = layer_decode(
+                        seg_params[f"l{i}"], x, cache[f"l{i}"], pos, self.cfg, self.ax, d
+                    )
+                    new_cache[f"l{i}"] = c
+                return x, new_cache
+
+            x, new_caches[f"seg{si}"] = jax.lax.scan(
+                body, x, (params[f"seg{si}"], caches[f"seg{si}"])
+            )
+        h = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        logits = lm_logits(params["embed"], h, self.ax)
+        return logits, new_caches

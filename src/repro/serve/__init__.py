@@ -1,0 +1,1 @@
+from .decode import decode_input_specs, generate, make_prefill, make_serve_step  # noqa: F401

@@ -1,0 +1,75 @@
+"""Serving substrate: prefill + batched single-token decode steps.
+
+``make_serve_step(model)`` returns the jit-able serve_step lowering target:
+one new token per sequence against a KV cache of the shape's seq_len —
+what decode_32k / long_500k lower. Sampling (greedy/temperature) runs on
+the final sharded logits.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import Model
+
+Array = jax.Array
+PyTree = Any
+
+
+def make_serve_step(model: Model, temperature: float = 0.0):
+    """serve_step(params, caches, tokens, pos, key) -> (next_tokens, caches)."""
+
+    def serve_step(params: PyTree, caches: PyTree, tokens: Array, pos: Array, key: Array):
+        logits, caches = model.decode_step(params, caches, tokens, pos)
+        last = logits[:, -1]
+        if temperature > 0.0:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], caches
+
+    return serve_step
+
+
+def make_prefill(model: Model, cache_len: int):
+    def prefill(params: PyTree, batch: PyTree):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    return prefill
+
+
+def decode_input_specs(model: Model) -> dict[str, P]:
+    ax = model.ax
+    return {"tokens": P(ax.b, None), "pos": P(), "key": P()}
+
+
+def generate(
+    model: Model,
+    params: PyTree,
+    prompt: Array,  # (B, L) int32
+    steps: int,
+    cache_len: int | None = None,
+    temperature: float = 0.0,
+    key: Array | None = None,
+    batch_extra: dict[str, Array] | None = None,
+) -> Array:
+    """Greedy/temperature generation loop (host-driven; each step jit'd)."""
+    b, l = prompt.shape
+    cache_len = cache_len or (l + steps)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    batch = {"tokens": prompt}
+    if batch_extra:
+        batch.update(batch_extra)
+    prefill = jax.jit(make_prefill(model, cache_len))
+    step = jax.jit(make_serve_step(model, temperature))
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for i in range(steps - 1):
+        key, sub = jax.random.split(key)
+        tok, caches = step(params, caches, tok, jnp.asarray(l + i, jnp.int32), sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

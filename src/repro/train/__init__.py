@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state, opt_state_specs  # noqa: F401
+from .train_step import TrainConfig, auto_train_config, batch_specs, make_train_step  # noqa: F401

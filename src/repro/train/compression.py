@@ -1,0 +1,58 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+At 256-1024 chips the step all-reduce of bf16 grads is the collective-term
+floor. Two standard tricks, both implemented as pure pytree transforms
+around the psum (so GSPMD schedules the smaller transfers):
+
+  * bf16 cast (2x vs fp32 master grads),
+  * int8 block-quantization with per-block fp scales (additional ~2x vs
+    bf16; error feedback optional via the caller keeping the residual).
+
+Quantize -> all-reduce -> dequantize is linear-safe for mean-reduction when
+scales are shared; we use per-shard local quantization + fp32 scale
+all-reduce, the scheme used by practical 1-bit/8-bit Adam variants.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8: returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape: tuple[int, ...], dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads: PyTree, mode: str = "none") -> PyTree:
+    """Apply lossy compression to a grad pytree (round-trip, simulating the
+    wire format the all-reduce would carry)."""
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if mode == "int8":
+        def roundtrip(g):
+            q, s = quantize_int8(g)
+            return dequantize_int8(q, s, g.shape, g.dtype)
+
+        return jax.tree.map(roundtrip, grads)
+    raise ValueError(f"unknown compression mode {mode!r}")

@@ -1,0 +1,118 @@
+"""Training step: microbatched grad accumulation + AdamW + sharding specs.
+
+The step is ONE jit'd program:
+  * ``lax.scan`` over microbatches — each microbatch's fwd/bwd is local
+    (activations never exceed one microbatch); the summed gradient is
+    all-reduced once by GSPMD at the boundary (compute/comm overlap comes
+    from XLA scheduling the reduce against the next microbatch's compute),
+  * optional gradient compression round-trip (bf16/int8) modelling the
+    wire format,
+  * AdamW with ZeRO-1 sharded state via out_shardings.
+
+``make_train_step(model, opt_cfg, microbatches, compression)`` returns
+(step_fn, batch_specs) ready for jit/lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import Model
+from .compression import compress_tree
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1  # grad-accumulation steps per optimizer step
+    compression: str = "none"  # none | bf16 | int8
+    accum_dtype: Any = jnp.float32  # bf16 halves the grad buffer at 405B
+
+
+def auto_train_config(param_count: int, global_batch: int, dp: int, moe: bool = False) -> TrainConfig:
+    """Memory-fitting defaults per model scale (see DESIGN §5 / EXPERIMENTS
+    §Dry-run memory table + §Perf llama3-405b)."""
+    if param_count >= 100e9 and not moe:
+        # few microbatches = few FSDP weight-gather passes (§Perf iter B/D);
+        # dense only — MoE dispatch buffers scale with microbatch size
+        n, state, accum = 4, jnp.bfloat16, jnp.bfloat16
+    elif param_count >= 100e9:
+        n, state, accum = 16, jnp.bfloat16, jnp.bfloat16
+    elif param_count >= 20e9:
+        n, state, accum = 8, jnp.float32, jnp.float32
+    elif param_count >= 2e9:
+        n, state, accum = 4, jnp.float32, jnp.float32
+    else:
+        n, state, accum = 2, jnp.float32, jnp.float32
+    n = max(1, min(n, global_batch // dp))
+    while global_batch % n or (global_batch // n) % dp:
+        n -= 1
+    return TrainConfig(
+        opt=AdamWConfig(state_dtype=state), microbatches=n, accum_dtype=accum
+    )
+
+
+def batch_specs(model: Model, shape_kind: str = "train") -> dict[str, P]:
+    ax = model.ax
+    specs = {"tokens": P(ax.b, None), "labels": P(ax.b, None)}
+    if model.cfg.input_mode == "embeddings":
+        specs["embeds"] = P(ax.b, None, None)
+    return specs
+
+
+def _split_microbatches(batch: PyTree, n: int) -> PyTree:
+    """(B, ...) -> (n, B/n, ...) for scanning."""
+
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    model: Model, tcfg: TrainConfig
+) -> Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState, dict[str, Array]]]:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params: PyTree, opt_state: OptState, batch: PyTree):
+        n = tcfg.microbatches
+        loss_and_grad = jax.value_and_grad(model.loss_fn)
+
+        if n == 1:
+            loss, grads = loss_and_grad(params, batch)
+        else:
+            mb = _split_microbatches(batch, n)
+
+            def acc_body(carry, mb_i):
+                loss_sum, g_sum = carry
+                loss_i, g_i = loss_and_grad(params, mb_i)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(tcfg.accum_dtype), g_sum, g_i
+                )
+                return (loss_sum + loss_i, g_sum), ()
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, tcfg.accum_dtype), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_body, (jnp.zeros(()), g0), mb)
+            loss = loss_sum / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+
+        grads = compress_tree(grads, tcfg.compression)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, tcfg.opt)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def metric_specs() -> dict[str, P]:
+    return {"loss": P(), "grad_norm": P(), "lr": P()}

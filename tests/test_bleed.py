@@ -1,0 +1,134 @@
+"""Algorithm 1 (serial Binary Bleed) — correctness + paper invariants."""
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Mode,
+    binary_bleed_recursive,
+    binary_bleed_worklist,
+    make_space,
+    standard_search,
+)
+
+
+def square_wave(k0, hi=1.0, lo=0.0):
+    return lambda k: hi if k <= k0 else lo
+
+
+def laplacian(k0, width=2.0):
+    return lambda k: math.exp(-abs(k - k0) / width)
+
+
+# ---------------------------------------------------------------------------
+# exact-answer properties (paper: Binary Bleed preserves correct k)
+# ---------------------------------------------------------------------------
+@given(k0=st.integers(2, 30), kmax=st.integers(2, 30))
+@settings(max_examples=100, deadline=None)
+def test_squarewave_finds_k0_worklist(k0, kmax):
+    if k0 > kmax:
+        k0 = kmax
+    space = make_space((2, kmax), 0.7)
+    res = binary_bleed_worklist(space, square_wave(k0), order="pre")
+    assert res.k_optimal == k0
+
+
+@given(k0=st.integers(2, 30), kmax=st.integers(2, 30))
+@settings(max_examples=100, deadline=None)
+def test_squarewave_finds_k0_recursive(k0, kmax):
+    if k0 > kmax:
+        k0 = kmax
+    space = make_space((2, kmax), 0.7)
+    res = binary_bleed_recursive(space, square_wave(k0))
+    assert res.k_optimal == k0
+
+
+@given(k0=st.integers(2, 60), kmax=st.integers(10, 60), order=st.sampled_from(["pre", "post", "in"]))
+@settings(max_examples=100, deadline=None)
+def test_never_more_visits_than_linear(k0, kmax, order):
+    """§III-D: 'Binary Bleed will not visit more k values than a linear search'."""
+    space = make_space((2, kmax), 0.7)
+    res = binary_bleed_worklist(space, square_wave(min(k0, kmax)), order=order)
+    assert res.n_visited <= len(space.ks)
+
+
+@given(k0=st.integers(5, 50))
+@settings(max_examples=50, deadline=None)
+def test_each_k_visited_at_most_once(k0):
+    calls = []
+    space = make_space((2, 60), 0.7)
+
+    def ev(k):
+        calls.append(k)
+        return square_wave(k0)(k)
+
+    binary_bleed_worklist(space, ev)
+    assert len(calls) == len(set(calls))
+
+
+def test_prunes_vs_standard():
+    space = make_space((2, 30), 0.7)
+    bb = binary_bleed_worklist(space, square_wave(24), order="pre")
+    std = standard_search(space, square_wave(24))
+    assert std.n_visited == 29  # standard visits 100% (paper)
+    assert bb.n_visited < std.n_visited
+    assert bb.k_optimal == std.k_optimal == 24
+
+
+def test_early_stop_prunes_upper():
+    space = make_space((2, 30), 0.7, stop_threshold=0.2)
+    res = binary_bleed_worklist(space, square_wave(8), order="pre")
+    assert res.k_optimal == 8
+    # vanilla on the same problem visits more
+    res_v = binary_bleed_worklist(make_space((2, 30), 0.7), square_wave(8), order="pre")
+    assert res.n_visited <= res_v.n_visited
+
+
+@given(k0=st.integers(2, 30))
+@settings(max_examples=60, deadline=None)
+def test_minimization_mode(k0):
+    """Davies-Bouldin style: low score good, k_opt = max selecting k."""
+    space = make_space((2, 30), 0.5, stop_threshold=1.5, mode=Mode.MINIMIZE)
+    ev = lambda k: 0.1 if k <= k0 else 2.0
+    res = binary_bleed_worklist(space, ev)
+    assert res.k_optimal == k0
+
+
+def test_laplacian_worst_case_degrades_gracefully():
+    """§III-D worst case: peak distribution — may visit everything but must
+    never exceed linear, and finds k0 if the peak is visited."""
+    space = make_space((2, 30), 0.9)
+    res = binary_bleed_worklist(space, laplacian(16, width=0.5), order="pre")
+    assert res.n_visited <= 29
+    assert res.k_optimal == 16  # 16 is the midpoint of [2..30] -> visited first
+
+
+def test_no_crossing_returns_none():
+    space = make_space((2, 20), 0.9)
+    res = binary_bleed_worklist(space, lambda k: 0.0)
+    assert res.k_optimal is None
+    assert res.best_effort_k() is not None
+
+
+def test_in_order_equals_linear_scan_for_vanilla():
+    space = make_space((2, 30), 0.7)
+    res = binary_bleed_worklist(space, square_wave(24), order="in")
+    # ascending order: every k <= 24 selects (each is the new max); ks > 24
+    # fail but were not yet pruned -> visits everything, like Standard
+    assert res.n_visited == 29
+
+
+@given(data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_pruned_ks_cannot_change_answer(data):
+    """Soundness of pruning: re-running with the skipped ks evaluated anyway
+    (standard search) gives the same k_optimal under square-wave scores."""
+    k0 = data.draw(st.integers(2, 40))
+    kmax = data.draw(st.integers(k0, 45))
+    space = make_space((2, kmax), 0.6)
+    ev = square_wave(k0)
+    assert (
+        binary_bleed_worklist(space, ev).k_optimal
+        == standard_search(space, ev).k_optimal
+    )

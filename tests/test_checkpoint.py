@@ -1,0 +1,89 @@
+"""Checkpointing: atomicity, restore, async, k-search journal composition."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ck
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree():
+    return {
+        "a": jax.random.normal(KEY, (8, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.ones((3,), jnp.bfloat16)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t)
+    got, step = ck.restore(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_step_ignores_incomplete(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 2, t)
+    # corrupt step 3: directory without manifest (simulated mid-save kill)
+    os.makedirs(tmp_path / "step_00000003")
+    assert ck.latest_step(str(tmp_path)) == 2
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    ck.save(str(tmp_path), 1, {"a": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), {"a": jnp.ones((5,))})
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path / "nope"), {"a": jnp.ones(1)})
+
+
+def test_prune_old_keeps_latest(tmp_path):
+    t = {"a": jnp.ones((2,))}
+    for s in range(6):
+        ck.save(str(tmp_path), s, t)
+    ck.prune_old(str(tmp_path), keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    remaining = sorted(p for p in os.listdir(tmp_path) if p.startswith("step_"))
+    assert len(remaining) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3):
+        saver.submit(s, t)
+    saver.close()
+    assert ck.latest_step(str(tmp_path)) == 3
+
+
+def test_manifest_contents(tmp_path):
+    t = {"a": jnp.ones((4, 2), jnp.float32)}
+    d = ck.save(str(tmp_path), 7, t)
+    man = json.load(open(os.path.join(d, "manifest.json")))
+    assert man["step"] == 7
+    assert man["leaves"][0]["shape"] == [4, 2]
+
+
+def test_train_resume_continuity(tmp_path):
+    """Kill-and-restart training: resumed run continues from the checkpoint."""
+    from repro.launch.train import main
+
+    a = main(["--arch", "qwen2-0.5b", "--steps", "6", "--batch", "4", "--seq", "16",
+              "--ckpt", str(tmp_path), "--ckpt-every", "3", "--quiet"])
+    assert ck.latest_step(str(tmp_path)) == 6
+    b = main(["--arch", "qwen2-0.5b", "--steps", "10", "--batch", "4", "--seq", "16",
+              "--ckpt", str(tmp_path), "--resume", "--quiet"])
+    # resumed run trains only steps 6..9 and keeps improving
+    assert len(b["losses"]) == 4
+    assert b["losses"][-1] < a["losses"][0]

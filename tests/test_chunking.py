@@ -1,0 +1,78 @@
+"""Algorithm 2 chunking + Table II T1-T4 composition + elastic rebalance."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.chunking import chunk_block, chunk_skip_mod, plan_worklists, rebalance
+
+KS = list(range(1, 12))
+
+
+def test_skip_mod_matches_paper():
+    assert chunk_skip_mod(KS, 2) == [[1, 3, 5, 7, 9, 11], [2, 4, 6, 8, 10]]
+
+
+def test_t2_matches_paper():
+    # Table II T2 pre-order: sort whole K, then Alg-2 chunk
+    assert plan_worklists(KS, 2, "pre", "T2") == [[3, 1, 5, 9, 7, 11], [6, 2, 4, 8, 10]]
+
+
+def test_t4_matches_paper():
+    # Table II T4 pre-order: Alg-2 chunk, then per-chunk sort
+    assert plan_worklists(KS, 2, "pre", "T4") == [[7, 3, 1, 5, 11, 9], [6, 4, 2, 10, 8]]
+
+
+def test_t4_postorder_matches_paper_modulo_typo():
+    # paper prints [2,4,9,10,6] — 9 is already in chunk 1; correct is [2,4,8,10,6]
+    assert plan_worklists(KS, 2, "post", "T4") == [[1, 5, 3, 9, 11, 7], [2, 4, 8, 10, 6]]
+
+
+def test_t1_t3_block_structure():
+    t1 = plan_worklists(KS, 2, "pre", "T1")
+    assert [len(c) for c in t1] == [6, 5]
+    t3 = plan_worklists(KS, 2, "pre", "T3")
+    # block chunk then per-chunk sort: first chunk only holds low k
+    assert set(t3[0]) == set(range(1, 7))
+
+
+@given(
+    ks=st.lists(st.integers(0, 5000), min_size=1, max_size=300, unique=True),
+    r=st.integers(1, 12),
+    strategy=st.sampled_from(["T1", "T2", "T3", "T4"]),
+)
+@settings(max_examples=80, deadline=None)
+def test_chunking_partitions_exactly(ks, r, strategy):
+    chunks = plan_worklists(ks, r, "pre", strategy)
+    assert len(chunks) == r
+    flat = [k for c in chunks for k in c]
+    assert sorted(flat) == sorted(ks)
+
+
+@given(ks=st.lists(st.integers(0, 5000), min_size=1, max_size=300, unique=True), r=st.integers(1, 12))
+@settings(max_examples=50, deadline=None)
+def test_skip_mod_balanced(ks, r):
+    chunks = chunk_skip_mod(ks, r)
+    sizes = [len(c) for c in chunks]
+    assert max(sizes) - min(sizes) <= 1  # load balance (paper's motivation)
+
+
+def test_skip_mod_spreads_low_and_high():
+    # each resource must hold both low and high k (T1's failure mode)
+    chunks = chunk_skip_mod(list(range(1, 101)), 4)
+    for c in chunks:
+        assert min(c) <= 10 and max(c) >= 90
+
+
+def test_rebalance_deterministic():
+    a = rebalance([5, 3, 9, 7, 1], 2)
+    b = rebalance([1, 3, 5, 7, 9], 2)
+    assert a == b
+
+
+def test_block_chunk_sizes():
+    assert [len(c) for c in chunk_block(KS, 3)] == [4, 4, 3]
+
+
+def test_invalid_resources():
+    with pytest.raises(ValueError):
+        chunk_skip_mod(KS, 0)

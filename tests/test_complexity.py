@@ -1,0 +1,50 @@
+"""§III-A empirical complexity: Θ(n^log2(p+1)) between log n (p=0) and n (p=1).
+
+For a pure square wave at k0=n (always selecting, never stopping), every
+midpoint selects: one recursion direction survives -> visits ~ log2(n) + the
+upward bleed tail. For k0 in the middle with no early-stop, both directions
+stay live above k0 -> visits grow like the number of k > k0 plus log terms.
+"""
+import math
+
+from repro.core import binary_bleed_worklist, make_space
+
+
+def visits(n, k0, stop=None):
+    space = make_space((1, n), 0.7, stop)
+    res = binary_bleed_worklist(space, lambda k: 1.0 if k <= k0 else 0.0, order="pre")
+    assert res.k_optimal == k0
+    return res.n_visited
+
+
+def test_best_case_logarithmic():
+    """k0 = n: every visit selects and prunes below — pure binary descent."""
+    for n in (64, 256, 1024, 4096):
+        v = visits(n, n)
+        assert v <= 2 * math.log2(n) + 4, (n, v)
+
+
+def test_scaling_exponent_below_linear():
+    """Fit visits ~ c*n^alpha over doublings; alpha must be < 1 (sub-linear)
+    for the square wave at k0 = n/2 with early stop."""
+    ns = [128, 256, 512, 1024, 2048]
+    vs = [visits(n, n // 2, stop=0.2) for n in ns]
+    alphas = [
+        math.log(vs[i + 1] / vs[i]) / math.log(ns[i + 1] / ns[i]) for i in range(len(ns) - 1)
+    ]
+    assert max(alphas) < 0.8, (vs, alphas)
+
+
+def test_worst_case_still_linear_bound():
+    """Never-selecting scores: every k is visited at most once (≤ n)."""
+    for n in (64, 512):
+        space = make_space((1, n), 0.9)
+        res = binary_bleed_worklist(space, lambda k: 0.0, order="pre")
+        assert res.n_visited <= n
+
+
+def test_vanilla_vs_earlystop_ordering():
+    """Early stop can only reduce visits (paper Fig 8: ES lines below Vanilla)."""
+    for n in (64, 256, 1024):
+        for k0 in (n // 4, n // 2, 3 * n // 4):
+            assert visits(n, k0, stop=0.2) <= visits(n, k0)

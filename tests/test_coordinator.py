@@ -1,0 +1,101 @@
+"""Coordinator (Redis-replacement) — monotone-merge properties + journal."""
+import math
+import threading
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Bounds, FileCoordinator, InProcessCoordinator, make_space
+from repro.core.coordinator import merge_all
+
+bounds_st = st.builds(
+    Bounds,
+    lo_bound=st.one_of(st.just(-math.inf), st.integers(-50, 50).map(float)),
+    hi_bound=st.one_of(st.just(math.inf), st.integers(-50, 50).map(float)),
+    k_optimal=st.one_of(st.none(), st.integers(0, 50)),
+)
+
+
+@given(a=bounds_st, b=bounds_st)
+@settings(max_examples=100, deadline=None)
+def test_merge_commutative(a, b):
+    assert a.merge(b) == b.merge(a)
+
+
+@given(a=bounds_st, b=bounds_st, c=bounds_st)
+@settings(max_examples=100, deadline=None)
+def test_merge_associative(a, b, c):
+    assert a.merge(b).merge(c) == a.merge(b.merge(c))
+
+
+@given(a=bounds_st)
+@settings(max_examples=50, deadline=None)
+def test_merge_idempotent(a):
+    assert a.merge(a) == a
+    assert a.merge(Bounds.empty()) == a
+
+
+@given(perm=st.permutations(list(range(6))))
+@settings(max_examples=40, deadline=None)
+def test_merge_order_invariant(perm):
+    """Stale/reordered publishes are harmless — the distributed guarantee."""
+    items = [Bounds(float(i), float(50 - i), i) for i in range(6)]
+    reordered = [items[i] for i in perm]
+    assert merge_all(items) == merge_all(reordered)
+
+
+def test_inprocess_concurrent_publish():
+    coord = InProcessCoordinator()
+
+    def pub(i):
+        coord.publish(Bounds(float(i), math.inf, i))
+
+    threads = [threading.Thread(target=pub, args=(i,)) for i in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    b = coord.snapshot()
+    assert b.lo_bound == 31.0 and b.k_optimal == 31
+
+
+def test_file_coordinator_roundtrip(tmp_path):
+    c = FileCoordinator(str(tmp_path))
+    c.publish(Bounds(3.0, math.inf, 3))
+    c.publish(Bounds(7.0, 20.0, 7))
+    b = c.snapshot()
+    assert b == Bounds(7.0, 20.0, 7)
+    c.record_visit(7, 0.95, resource=1)
+    c.record_visit(12, 0.1, resource=0)
+    assert len(c.visits()) == 2
+
+
+def test_file_coordinator_replay(tmp_path):
+    """Journal replay rebuilds bounds + visited set — search restart."""
+    space = make_space((2, 30), 0.7, 0.2)
+    c = FileCoordinator(str(tmp_path))
+    c.record_visit(16, 0.95, 0)  # selects -> prunes <=16
+    c.record_visit(24, 0.05, 1)  # stops  -> prunes >=24
+    bounds, visited = c.replay(space.selects, space.stops)
+    assert visited == {16, 24}
+    assert bounds.lo_bound == 16 and bounds.hi_bound == 24 and bounds.k_optimal == 16
+
+
+def test_file_coordinator_multiprocess_safety(tmp_path):
+    """Concurrent writers through the lockfile keep merges consistent."""
+    c = FileCoordinator(str(tmp_path))
+    errs = []
+
+    def pub(i):
+        try:
+            c.publish(Bounds(float(i), math.inf, i))
+        except BaseException as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=pub, args=(i,)) for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert c.snapshot().k_optimal == 15

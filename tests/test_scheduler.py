@@ -1,0 +1,140 @@
+"""Algorithms 3/4: multi-resource scheduling, pruning broadcast, elasticity,
+straggler speculation, §III-D in-flight aborts."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ResourceEvent, SimulatedScheduler, ThreadPoolScheduler, make_space
+from repro.core.scheduler import ScheduleTrace
+
+
+def square_wave(k0):
+    return lambda k: 1.0 if k <= k0 else 0.0
+
+
+@given(k0=st.integers(2, 30), r=st.integers(1, 8), order=st.sampled_from(["pre", "post"]))
+@settings(max_examples=80, deadline=None)
+def test_simulated_finds_k0(k0, r, order):
+    space = make_space((2, 30), 0.7)
+    trace = SimulatedScheduler(space, r, order=order).run(square_wave(k0))
+    assert trace.k_optimal == k0
+
+
+@given(k0=st.integers(2, 30), r=st.integers(2, 8))
+@settings(max_examples=60, deadline=None)
+def test_threadpool_finds_k0(k0, r):
+    space = make_space((2, 30), 0.7)
+    res = ThreadPoolScheduler(space, r).run(square_wave(k0))
+    assert res.k_optimal == k0
+
+
+def test_parallel_visits_at_most_all():
+    space = make_space((2, 100), 0.7)
+    trace = SimulatedScheduler(space, 4).run(square_wave(70))
+    assert trace.n_visited <= 99
+    assert trace.n_visited + len(trace.skipped) == 99
+
+
+def test_makespan_improves_with_resources():
+    space = make_space((2, 60), 0.7)
+    t1 = SimulatedScheduler(space, 1).run(square_wave(40))
+    t4 = SimulatedScheduler(space, 4).run(square_wave(40))
+    assert t4.makespan < t1.makespan
+
+
+def test_paper_fig4_dynamics():
+    """Fig 4 scenario: thresholds crossed at {7, 8, 10, 24}; k_opt = 24 and
+    k values below the first crossing get pruned."""
+    crossings = {7, 8, 10, 24}
+    ev = lambda k: 1.0 if k in crossings else 0.0
+    space = make_space((2, 30), 0.7)
+    trace = SimulatedScheduler(space, 4, order="pre").run(ev)
+    assert trace.k_optimal == 24
+
+
+def test_abort_in_flight():
+    """§III-D: long fits poll prune state between chunks and exit early.
+
+    Two resources start their chunk midpoints (22 and 21); lower k runs
+    longer, so 22 finishes first, selects, and prunes 21 mid-flight."""
+    space = make_space((2, 40), 0.7)
+    dur = lambda k: 41.0 - k
+    sched = SimulatedScheduler(space, 2, duration_fn=dur, abort_in_flight=True)
+    trace = sched.run(square_wave(39))
+    assert trace.aborted, "expected in-flight aborts"
+    assert trace.k_optimal == 39
+    # aborted evaluations saved wall-clock vs letting them finish
+    no_abort = SimulatedScheduler(space, 2, duration_fn=dur).run(square_wave(39))
+    assert trace.busy_time < no_abort.busy_time
+
+
+def test_straggler_speculation():
+    space = make_space((2, 9), 0.7)
+    dur = {k: 1.0 for k in space.ks}
+    dur[3] = 50.0  # straggler
+    sched = SimulatedScheduler(
+        space, 4, duration_fn=lambda k: dur[k], speculate_stragglers=True
+    )
+    trace = sched.run(square_wave(9))
+    assert trace.k_optimal == 9
+    # speculation must not lose correctness and should not inflate visits
+    assert trace.n_visited <= len(space.ks)
+
+
+def test_resource_failure_rebalances():
+    space = make_space((2, 40), 0.7)
+    events = [ResourceEvent(t=1.5, kind="fail", rid=0)]
+    trace = SimulatedScheduler(space, 4, duration_fn=lambda k: 1.0, events=events).run(
+        square_wave(33)
+    )
+    assert trace.k_optimal == 33  # dead resource's work was re-dealt
+
+
+def test_elastic_join_helps():
+    # never-selecting scores: no pruning, so extra resources cut makespan
+    space = make_space((2, 60), 0.99)
+    ev = lambda k: 0.0
+    base = SimulatedScheduler(space, 2, duration_fn=lambda k: 1.0).run(ev)
+    events = [ResourceEvent(t=0.5, kind="join", rid=-1), ResourceEvent(t=0.5, kind="join", rid=-1)]
+    grown = SimulatedScheduler(space, 2, duration_fn=lambda k: 1.0, events=events).run(ev)
+    assert grown.n_visited == base.n_visited == 59
+    assert grown.makespan < base.makespan
+
+
+def test_busy_time_accounting():
+    space = make_space((2, 20), 0.7)
+    trace = SimulatedScheduler(space, 3, duration_fn=lambda k: 2.0).run(square_wave(15))
+    assert math.isclose(trace.busy_time, 2.0 * trace.n_visited, rel_tol=1e-6)
+
+
+def test_threadpool_abort_callback_wired():
+    space = make_space((2, 16), 0.7)
+    saw_abort_arg = []
+
+    def ev(k, should_abort=None):
+        saw_abort_arg.append(should_abort is not None)
+        return 1.0 if k <= 9 else 0.0
+
+    res = ThreadPoolScheduler(space, 2).run(ev)
+    assert res.k_optimal == 9
+    assert all(saw_abort_arg)
+
+
+def test_threadpool_worker_exception_propagates():
+    space = make_space((2, 8), 0.7)
+
+    def ev(k):
+        raise RuntimeError("fit crashed")
+
+    with pytest.raises(RuntimeError):
+        ThreadPoolScheduler(space, 2).run(ev)
+
+
+def test_trace_to_result_roundtrip():
+    space = make_space((2, 30), 0.7)
+    trace = SimulatedScheduler(space, 3).run(square_wave(20))
+    res = trace.to_result()
+    assert res.k_optimal == 20
+    assert res.n_visited == len(trace.visits)

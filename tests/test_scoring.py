@@ -1,0 +1,96 @@
+"""JAX scoring functions vs naive python oracles + §III-D score models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scoring import (
+    davies_bouldin_score,
+    laplacian_score,
+    pairwise_sq_dists,
+    silhouette_score,
+    square_wave_score,
+)
+
+
+def _naive_silhouette(x, labels, k):
+    x = np.asarray(x, np.float64)
+    labels = np.asarray(labels)
+    n = len(x)
+    d = np.sqrt(((x[:, None] - x[None, :]) ** 2).sum(-1))
+    s = np.zeros(n)
+    for i in range(n):
+        own = labels == labels[i]
+        if own.sum() <= 1:
+            s[i] = 0.0
+            continue
+        a = d[i][own].sum() / (own.sum() - 1)
+        b = np.inf
+        for c in range(k):
+            if c == labels[i] or not (labels == c).any():
+                continue
+            b = min(b, d[i][labels == c].mean())
+        s[i] = (b - a) / max(a, b)
+    return s.mean()
+
+
+def _naive_db(x, labels, k):
+    x = np.asarray(x, np.float64)
+    labels = np.asarray(labels)
+    cents, scat = [], []
+    for c in range(k):
+        pts = x[labels == c]
+        cents.append(pts.mean(0))
+        scat.append(np.sqrt(((pts - pts.mean(0)) ** 2).sum(-1)).mean())
+    total = 0.0
+    for i in range(k):
+        worst = 0.0
+        for j in range(k):
+            if i == j:
+                continue
+            m = np.sqrt(((cents[i] - cents[j]) ** 2).sum())
+            worst = max(worst, (scat[i] + scat[j]) / m)
+        total += worst
+    return total / k
+
+
+@pytest.mark.parametrize("n,d,k", [(30, 4, 3), (60, 6, 5)])
+def test_silhouette_matches_naive(n, d, k):
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n, d))
+    labels = jax.random.randint(key, (n,), 0, k)
+    got = float(silhouette_score(x, labels, k))
+    want = _naive_silhouette(x, labels, k)
+    assert abs(got - want) < 2e-4
+
+
+@pytest.mark.parametrize("n,d,k", [(40, 3, 4), (80, 5, 4)])
+def test_davies_bouldin_matches_naive(n, d, k):
+    key = jax.random.PRNGKey(n + 1)
+    centers = 6.0 * jax.random.normal(jax.random.fold_in(key, 1), (k, d))
+    labels = jax.random.randint(key, (n,), 0, k)
+    x = centers[labels] + 0.3 * jax.random.normal(key, (n, d))
+    got = float(davies_bouldin_score(x, labels, k))
+    want = _naive_db(x, labels, k)
+    assert abs(got - want) / want < 2e-3
+
+
+def test_pairwise_nonneg_and_symmetric():
+    x = jax.random.normal(jax.random.PRNGKey(0), (25, 7))
+    d2 = pairwise_sq_dists(x)
+    assert float(jnp.min(d2)) >= 0.0
+    np.testing.assert_allclose(d2, d2.T, atol=1e-5)
+    np.testing.assert_allclose(jnp.diag(d2), 0.0, atol=1e-4)
+
+
+def test_square_wave_shape():
+    ks = jnp.arange(1, 31)
+    s = square_wave_score(ks, 17)
+    assert float(s[16]) == 1.0  # k=17 included
+    assert float(s[17]) == 0.0  # k=18 off the cliff
+    assert bool(jnp.all(s[:17] == 1.0)) and bool(jnp.all(s[17:] == 0.0))
+
+
+def test_laplacian_peak():
+    s = laplacian_score(jnp.arange(1, 31), 10, width=2.0)
+    assert int(jnp.argmax(s)) == 9

@@ -1,0 +1,48 @@
+"""Traversal sorts (paper Fig. 1 / Table II) — exact values + properties."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.traversal import inverse_visit_rank, traversal_sort
+
+KS_1_11 = list(range(1, 12))
+
+
+def test_table2_preorder_exact():
+    assert traversal_sort(KS_1_11, "pre") == [6, 3, 2, 1, 5, 4, 9, 8, 7, 11, 10]
+
+
+def test_table2_postorder_exact():
+    assert traversal_sort(KS_1_11, "post") == [1, 2, 4, 5, 3, 7, 8, 10, 11, 9, 6]
+
+
+def test_table2_inorder_exact():
+    assert traversal_sort(KS_1_11, "in") == KS_1_11
+
+
+@pytest.mark.parametrize("order", ["pre", "in", "post"])
+@given(ks=st.lists(st.integers(0, 10_000), min_size=0, max_size=200, unique=True))
+@settings(max_examples=60, deadline=None)
+def test_traversal_is_permutation(order, ks):
+    ks = sorted(ks)
+    out = traversal_sort(ks, order)
+    assert sorted(out) == ks
+    assert len(out) == len(ks)
+
+
+@given(n=st.integers(1, 300))
+@settings(max_examples=40, deadline=None)
+def test_preorder_root_is_binary_search_midpoint(n):
+    ks = list(range(n))
+    out = traversal_sort(ks, "pre")
+    assert out[0] == ks[n // 2]  # Algorithm 1's first probe
+
+
+def test_inverse_visit_rank():
+    ranks = inverse_visit_rank(KS_1_11, "pre")
+    assert ranks[6] == 0 and ranks[3] == 1 and ranks[10] == 10
+
+
+def test_bad_order_raises():
+    with pytest.raises(ValueError):
+        traversal_sort([1, 2], "bfs")
