@@ -1,0 +1,90 @@
+"""Per-k threads vs batched wavefronts: visits, makespan, compile counts.
+
+The thread path (paper Alg 3/4 on one device) pays one jit trace per
+distinct k it visits — ``nmfk_score`` is compiled with static k — plus
+Python-thread contention for the single device. The wavefront path fits a
+whole frontier as one mask-padded vmapped NMFk at a fixed ``k_pad``, so the
+number of compilations is the number of distinct padded batch shapes
+(a handful, by power-of-two bucketing) regardless of |K|.
+
+Compile counts are reported as deterministic static-shape counts:
+  threads  -> number of distinct k values evaluated (one trace each)
+  batched  -> len(plane.shapes_compiled)
+
+  PYTHONPATH=src python benchmarks/bench_wavefront.py --k-max 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import ThreadPoolScheduler, WavefrontScheduler, make_space
+from repro.factorization.nmfk import make_nmfk_evaluator
+from repro.factorization.planes import NMFkBatchPlane
+from repro.factorization.synthetic import nmf_data
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--m", type=int, default=72)
+    ap.add_argument("--k-true", type=int, default=5)
+    ap.add_argument("--k-min", type=int, default=2)
+    ap.add_argument("--k-max", type=int, default=16)
+    ap.add_argument("--threshold", type=float, default=0.9)
+    ap.add_argument("--resources", type=int, default=4)
+    ap.add_argument("--n-perturbs", type=int, default=4)
+    ap.add_argument("--nmf-iters", type=int, default=100)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(0)
+    v, _, _ = nmf_data(key, n=args.n, m=args.m, k_true=args.k_true)
+    space = make_space((args.k_min, args.k_max), args.threshold)
+
+    # -- per-k thread path ---------------------------------------------------
+    evaluate = make_nmfk_evaluator(v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters)
+    t0 = time.time()
+    res_t = ThreadPoolScheduler(space, args.resources).run(evaluate)
+    t_threads = time.time() - t0
+    compiles_threads = len(set(res_t.visited_ks))  # static k -> one trace each
+
+    # -- batched wavefront path ----------------------------------------------
+    plane = NMFkBatchPlane(
+        v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters, k_pad=args.k_max
+    )
+    sched = WavefrontScheduler(space)
+    t0 = time.time()
+    res_b = sched.run(plane)
+    t_batched = time.time() - t0
+
+    out = {
+        "n_candidates": len(space.ks),
+        "threads": {
+            "k_optimal": res_t.k_optimal,
+            "n_visited": res_t.n_visited,
+            "seconds": round(t_threads, 2),
+            "jit_compiles": compiles_threads,
+            "resources": args.resources,
+        },
+        "batched": {
+            "k_optimal": res_b.k_optimal,
+            "n_visited": res_b.n_visited,
+            "seconds": round(t_batched, 2),
+            "jit_compiles": len(plane.shapes_compiled),
+            "waves": sched.n_dispatches,
+            "compiled_shapes": sorted(plane.shapes_compiled),
+        },
+        "speedup": round(t_threads / max(t_batched, 1e-9), 2),
+        "agree": res_t.k_optimal == res_b.k_optimal,
+    }
+    if not args.quiet:
+        print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,11 +1,15 @@
 """Binary Bleed core: the paper's contribution as a composable library."""
 from .api import (  # noqa: F401
+    EvalPlane,
     Mode,
+    ScalarEvalPlane,
     ScheduleTrace,
     SearchResult,
     SearchSpace,
     SimulatedScheduler,
     ThreadPoolScheduler,
+    WavefrontScheduler,
+    as_eval_plane,
     binary_bleed_recursive,
     binary_bleed_search,
     binary_bleed_worklist,
@@ -13,14 +17,18 @@ from .api import (  # noqa: F401
     make_space,
     standard_search,
 )
+from .evalplane import Wave  # noqa: F401
 from .chunking import chunk_block, chunk_skip_mod, plan_worklists, rebalance  # noqa: F401
 from .coordinator import Bounds, FileCoordinator, InProcessCoordinator  # noqa: F401
 from .scheduler import ResourceEvent  # noqa: F401
 from .scoring import (  # noqa: F401
     davies_bouldin_score,
+    davies_bouldin_score_masked,
     laplacian_score,
     pairwise_sq_dists,
+    silhouette_samples_masked,
     silhouette_score,
+    silhouette_score_masked,
     square_wave_score,
 )
 from .traversal import traversal_sort  # noqa: F401

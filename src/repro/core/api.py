@@ -12,12 +12,20 @@
         order="pre",
     )
     result.k_optimal, result.visit_fraction
+
+Executors: serial worklist (num_resources=1), "threads" (one fit per k per
+worker thread), "simulate" (deterministic discrete-event), and "batched" —
+the wavefront executor, which dispatches each frontier of live midpoints as
+one ``evaluate_batch`` call against an ``EvalPlane`` (e.g. the mask-padded
+vmapped fits in ``repro.factorization.planes``), amortizing trace/JIT/
+dispatch across every k in the wave.
 """
 from __future__ import annotations
 
 from typing import Callable, Sequence
 
 from .bleed import binary_bleed_recursive, binary_bleed_worklist, standard_search
+from .evalplane import EvalPlane, ScalarEvalPlane, WavefrontScheduler, as_eval_plane
 from .scheduler import ScheduleTrace, SimulatedScheduler, ThreadPoolScheduler
 from .search_space import Mode, SearchResult, SearchSpace
 from .traversal import Order
@@ -47,15 +55,30 @@ def binary_bleed_search(
     order: Order = "pre",
     strategy: str = "T4",
     executor: str = "threads",
+    max_wave: int | None = None,
 ) -> SearchResult:
     """Run Binary Bleed over k_range; returns SearchResult.
 
-    ``num_resources == 1`` runs the serial Algorithm 1 (worklist form).
-    Otherwise resources execute concurrently (``executor="threads"``) or
-    deterministically in simulation (``executor="simulate"`` — used by
-    benchmarks; evaluation still happens exactly once per visited k).
+    Executors:
+
+    * ``"threads"`` (default) — ``num_resources`` worker threads, each
+      walking a T4 worklist and fitting one k at a time; prune bounds are
+      shared through a coordinator. ``num_resources == 1`` runs the serial
+      Algorithm 1 (worklist form) instead.
+    * ``"simulate"`` — deterministic discrete-event simulation of the same
+      plan (used by benchmarks; evaluation still happens exactly once per
+      visited k).
+    * ``"batched"`` — the wavefront executor: the frontier of live subtree
+      midpoints is dispatched as ONE ``evaluate_batch`` call per wave, so a
+      single padded/vmapped fit (e.g. ``repro.factorization.planes``)
+      serves every k in the wave with one jit compilation. ``evaluate``
+      may be a scalar callable (batched trivially) or any ``EvalPlane``;
+      ``max_wave`` caps the ks per dispatch. ``num_resources`` is ignored —
+      parallelism comes from the batch axis, not threads.
     """
     space = make_space(k_range, select_threshold, stop_threshold, mode)
+    if executor == "batched":
+        return WavefrontScheduler(space, max_wave=max_wave).run(evaluate)
     if num_resources <= 1:
         return binary_bleed_worklist(space, evaluate, order=order)
     if executor == "threads":
@@ -83,6 +106,10 @@ __all__ = [
     "binary_bleed_recursive",
     "binary_bleed_worklist",
     "standard_search",
+    "EvalPlane",
+    "ScalarEvalPlane",
+    "WavefrontScheduler",
+    "as_eval_plane",
     "SimulatedScheduler",
     "ThreadPoolScheduler",
     "ScheduleTrace",

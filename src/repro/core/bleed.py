@@ -34,6 +34,9 @@ from .traversal import Order, traversal_sort
 # evaluate(k) -> score. Long-running fits may additionally accept an
 # ``should_abort`` kwarg (checked between fit chunks, §III-D) — the serial
 # driver never aborts, the scheduler wires it to live prune state.
+# Every driver also accepts an ``EvalPlane`` (anything with
+# ``evaluate_batch``) in place of the scalar callable; scalar callables are
+# wrapped in a ``ScalarEvalPlane`` adapter internally.
 EvalFn = Callable[[int], float]
 
 
@@ -102,8 +105,11 @@ def binary_bleed_recursive(
     half (Alg 1 lines 16-19): for the max-k objective, finding a higher
     selecting k first prunes more of the lower half.
     """
+    from .evalplane import as_eval_plane  # lazy: evalplane sits below bleed
+
     ks = space.ks
     state = BleedState(space)
+    plane = as_eval_plane(evaluate)
 
     def search(lo: int, hi: int) -> None:  # [lo, hi) index interval
         if lo >= hi:
@@ -114,7 +120,7 @@ def binary_bleed_recursive(
         mid = lo + (hi - lo) // 2
         k_mid = ks[mid]
         if state.should_visit(k_mid):  # Alg 1 line 7
-            state.record(k_mid, evaluate(k_mid))  # lines 8-15
+            state.record(k_mid, plane.evaluate_one(k_mid))  # lines 8-15
         halves = ((mid + 1, hi), (lo, mid)) if bleed_up_first else ((lo, mid), (mid + 1, hi))
         for a, b in halves:  # lines 16-19: bleed into both directions
             search(a, b)
@@ -142,13 +148,16 @@ def binary_bleed_worklist(
     Passing an external ``state`` lets callers resume a checkpointed search
     or share bounds across resources (the scheduler does both).
     """
+    from .evalplane import as_eval_plane  # lazy: evalplane sits below bleed
+
     if worklist is None:
         worklist = traversal_sort(sorted(space.ks), order)
     state = state if state is not None else BleedState(space)
+    plane = as_eval_plane(evaluate)
     for k in worklist:
         if not state.should_visit(k):
             continue
-        state.record(k, evaluate(k))
+        state.record(k, plane.evaluate_one(k))
     return state.result()
 
 
@@ -157,9 +166,12 @@ def standard_search(space: SearchSpace, evaluate: EvalFn) -> SearchResult:
 
     Visits 100% of K and picks k_opt = max{k : S(f(k)) crosses T}.
     """
+    from .evalplane import as_eval_plane  # lazy: evalplane sits below bleed
+
     state = BleedState(space)
+    plane = as_eval_plane(evaluate)
     for k in space.ks:
-        state.record(k, evaluate(k))
+        state.record(k, plane.evaluate_one(k))
         # Standard never prunes: reset bounds so every k is visited.
         state.lo_bound = -math.inf
         state.hi_bound = math.inf

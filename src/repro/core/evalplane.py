@@ -1,0 +1,217 @@
+"""Evaluation plane: the batched dispatch surface under every Bleed driver.
+
+The paper treats "resources" as threads/ranks that each fit one k at a
+time, so every distinct k pays its own trace/JIT/dispatch cost. On a
+single accelerator the hardware-shaped alternative is to dispatch a whole
+*frontier* of independent k values as one padded, vmapped fit. This module
+defines the seam between the two worlds:
+
+  * ``EvalPlane`` — protocol: ``evaluate_batch(ks) -> scores`` (plus a
+    scalar ``evaluate_one`` used by the per-k drivers). Anything with an
+    ``evaluate_batch`` method qualifies; the batched factorization planes
+    (``repro.factorization.planes``) implement it with mask-padded vmapped
+    fits, one jit compilation per padded shape.
+  * ``ScalarEvalPlane`` — adapter wrapping today's scalar ``evaluate(k)``
+    callables (optionally accepting ``should_abort``, §III-D) so the
+    serial worklist, thread scheduler, and simulator all route through the
+    same interface unchanged.
+  * ``WavefrontScheduler`` — the batched executor: repeatedly collect the
+    frontier of live subtree midpoints (independent under Alg 3/4
+    semantics — no midpoint in a wave can prune another before scores
+    land), dispatch them as one batch, fold every score into
+    ``BleedState``, re-prune, and descend into the surviving subtrees.
+
+Layering note: this module sits *below* ``bleed.py`` (which lazily imports
+``as_eval_plane``), so it must not import ``bleed`` at module scope.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, Protocol, Sequence, runtime_checkable
+
+from .search_space import SearchResult, SearchSpace
+
+AbortFn = Callable[[], bool]
+
+
+@runtime_checkable
+class EvalPlane(Protocol):
+    """A surface that scores candidate k values, possibly many at once."""
+
+    def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
+        """Score each k in ``ks``; returns scores aligned with the input."""
+        ...
+
+    def evaluate_one(self, k: int, should_abort: AbortFn | None = None) -> float:
+        """Score a single k (scalar drivers; ``should_abort`` per §III-D)."""
+        ...
+
+
+class ScalarEvalPlane:
+    """Adapter: a scalar ``evaluate(k)`` callable as an ``EvalPlane``.
+
+    Detects once whether the callable accepts the §III-D ``should_abort``
+    kwarg and forwards it only then, preserving the historical contract of
+    ``ThreadPoolScheduler.run``.
+    """
+
+    def __init__(self, fn: Callable[..., float]):
+        self.fn = fn
+        self.accepts_abort = False
+        try:
+            self.accepts_abort = "should_abort" in inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            pass
+
+    def evaluate_one(self, k: int, should_abort: AbortFn | None = None) -> float:
+        # forward only a real callback: passing should_abort=None would
+        # override a callable default the evaluator polls unconditionally
+        if should_abort is not None and self.accepts_abort:
+            return float(self.fn(k, should_abort=should_abort))
+        return float(self.fn(k))
+
+    def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
+        return [self.evaluate_one(k) for k in ks]
+
+
+class _BatchOnlyAdapter:
+    """Gives batch-only planes the scalar entry point the drivers expect."""
+
+    def __init__(self, plane):
+        self.plane = plane
+
+    def evaluate_one(self, k: int, should_abort: AbortFn | None = None) -> float:
+        del should_abort  # batched fits have no chunk boundary to poll
+        return float(self.plane.evaluate_batch([k])[0])
+
+    def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
+        return self.plane.evaluate_batch(ks)
+
+
+def as_eval_plane(evaluate) -> EvalPlane:
+    """Coerce a scalar callable or an EvalPlane-shaped object to EvalPlane."""
+    if hasattr(evaluate, "evaluate_batch"):
+        if hasattr(evaluate, "evaluate_one"):
+            return evaluate
+        return _BatchOnlyAdapter(evaluate)
+    if callable(evaluate):
+        return ScalarEvalPlane(evaluate)
+    raise TypeError(f"cannot use {type(evaluate).__name__} as an evaluation plane")
+
+
+@dataclasses.dataclass
+class Wave:
+    """One dispatched frontier: the ks sent together and their scores."""
+
+    index: int
+    ks: list[int]
+    scores: list[float]
+    lo_bound: float  # prune bounds after folding this wave's scores
+    hi_bound: float
+
+
+class WavefrontScheduler:
+    """Batched Binary Bleed: evaluate frontiers of live midpoints as waves.
+
+    Walks the same binary tree over ``space.ks`` as Algorithm 1, but
+    breadth-first: the midpoints of all currently-live index intervals are
+    independent (none is an ancestor of another), so they are dispatched to
+    the plane as one ``evaluate_batch`` call. All returned scores are folded
+    into the shared ``BleedState``, subtrees falling outside the updated
+    bounds are dropped, and the next wave is the midpoints of the surviving
+    children. Wave w holds at most 2^w entries, so a full run issues at most
+    ceil(log2(|K|))+1 batch dispatches instead of one per visited k.
+
+    Compared to the serial driver this may evaluate ks a just-landed wave
+    would have pruned (same trade as the paper's multi-resource runs — a
+    wave is "resources" executing concurrently), so visits form a superset
+    of the serial schedule's but remain a subset of the pre-order worklist,
+    and pruning soundness (pruned ks cannot be optimal) keeps ``k_optimal``
+    identical for threshold-separable score shapes.
+
+    ``max_wave`` caps the number of ks per dispatch (e.g. device memory);
+    chunks of one wave re-check the prune state between dispatches, highest
+    k first (``bleed_up_first``) since for the max-k objective high
+    selecting ks prune the most.
+    """
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        max_wave: int | None = None,
+        bleed_up_first: bool = True,
+    ):
+        if max_wave is not None and max_wave < 1:
+            raise ValueError("max_wave must be >= 1")
+        self.space = space
+        self.max_wave = max_wave
+        self.bleed_up_first = bleed_up_first
+        self.waves: list[Wave] = []
+
+    def run(self, evaluate, state=None) -> SearchResult:
+        from .bleed import BleedState  # lazy: bleed sits above this module
+
+        plane = as_eval_plane(evaluate)
+        # tell capacity-aware planes the dispatch bound so their batch
+        # padding (a compile-reuse optimization) never exceeds it; assign
+        # unconditionally so a reused plane doesn't keep a stale cap
+        if hasattr(plane, "dispatch_cap"):
+            plane.dispatch_cap = self.max_wave
+        space = self.space
+        ks = space.ks
+        state = state if state is not None else BleedState(space)
+        self.waves = []
+        wave_idx = 0
+        intervals: list[tuple[int, int]] = [(0, len(ks))]  # [lo, hi) index spans
+
+        while intervals:
+            live = [
+                (lo, hi)
+                for lo, hi in intervals
+                if lo < hi and state.interval_alive(ks[lo], ks[hi - 1])
+            ]
+            mids = [lo + (hi - lo) // 2 for lo, hi in live]
+            pending = [ks[m] for m in mids if state.should_visit(ks[m])]
+            pending.sort(reverse=self.bleed_up_first)
+            step = self.max_wave if self.max_wave is not None else max(len(pending), 1)
+            for start in range(0, len(pending), step):
+                # re-filter: earlier chunks of this wave may have pruned these
+                chunk = [k for k in pending[start : start + step] if state.should_visit(k)]
+                if not chunk:
+                    continue
+                scores = plane.evaluate_batch(chunk)
+                if len(scores) != len(chunk):
+                    raise ValueError(
+                        f"evaluate_batch returned {len(scores)} scores for {len(chunk)} ks"
+                    )
+                for k, score in zip(chunk, scores):
+                    state.record(k, float(score), resource=wave_idx)
+                self.waves.append(
+                    Wave(wave_idx, list(chunk), [float(s) for s in scores],
+                         state.lo_bound, state.hi_bound)
+                )
+                wave_idx += 1
+            # descend: children of every live interval (midpoint evaluated or
+            # not — Alg 1 recurses regardless); dead ones are filtered above.
+            nxt: list[tuple[int, int]] = []
+            for (lo, hi), mid in zip(live, mids):
+                halves = ((mid + 1, hi), (lo, mid)) if self.bleed_up_first else ((lo, mid), (mid + 1, hi))
+                nxt.extend(h for h in halves if h[0] < h[1])
+            intervals = nxt
+
+        return state.result()
+
+    @property
+    def n_dispatches(self) -> int:
+        """Number of batch dispatches issued by the last ``run``."""
+        return len(self.waves)
+
+
+__all__ = [
+    "EvalPlane",
+    "ScalarEvalPlane",
+    "WavefrontScheduler",
+    "Wave",
+    "as_eval_plane",
+]

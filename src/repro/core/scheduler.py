@@ -32,6 +32,7 @@ from typing import Callable, Sequence
 from .bleed import BleedState
 from .chunking import plan_worklists, rebalance
 from .coordinator import Bounds, InProcessCoordinator
+from .evalplane import as_eval_plane
 from .search_space import SearchResult, SearchSpace, VisitRecord
 from .traversal import Order
 
@@ -111,6 +112,7 @@ class SimulatedScheduler:
         self.events = sorted(events, key=lambda e: e.t)
 
     def run(self, evaluate: EvalFn) -> ScheduleTrace:
+        plane = as_eval_plane(evaluate)
         state = BleedState(self.space)
         worklists = plan_worklists(self.space.ks, self.num_resources, self.order, self.strategy)
         queues: dict[int, list[int]] = {r: list(w) for r, w in enumerate(worklists)}
@@ -172,8 +174,10 @@ class SimulatedScheduler:
                     # in-flight work lost: the k never completed, re-queue it
                     if ev.rid in running:
                         k, t_s, _ = running.pop(ev.rid)
-                        in_flight_ks.get(k, []) and in_flight_ks[k].remove(ev.rid)
-                        if not in_flight_ks.get(k):
+                        dup_list = in_flight_ks.get(k, [])
+                        if ev.rid in dup_list:
+                            dup_list.remove(ev.rid)
+                        if not dup_list:
                             started.discard(k)  # nobody else running it -> redo
                     # elastic re-chunk: pool unvisited ks over survivors (Alg 2)
                     pool = sorted(
@@ -225,7 +229,7 @@ class SimulatedScheduler:
                 busy += t_e - t_s
                 if k in scores:  # speculation duplicate finished second
                     continue
-                score = evaluate(k)
+                score = plane.evaluate_one(k)
                 scores[k] = score
                 state.record(k, score, resource=rid)
                 visits.append(SimVisit(k, score, rid, t_s, t_e))
@@ -239,7 +243,9 @@ class SimulatedScheduler:
                 for rid, (k, t_s, t_e) in list(running.items()):
                     if not state.should_visit(k):
                         running.pop(rid)
-                        in_flight_ks.get(k, []) and in_flight_ks[k].remove(rid)
+                        dup_list = in_flight_ks.get(k, [])
+                        if rid in dup_list:
+                            dup_list.remove(rid)
                         busy += now - t_s
                         aborted.append(SimVisit(k, float("nan"), rid, t_s, now, aborted=True))
             for rid in sorted(alive):
@@ -287,14 +293,7 @@ class ThreadPoolScheduler:
         self.coordinator = coordinator if coordinator is not None else InProcessCoordinator()
 
     def run(self, evaluate: Callable[..., float], skip: set[int] | None = None) -> SearchResult:
-        import inspect
-
-        accepts_abort = False
-        try:
-            accepts_abort = "should_abort" in inspect.signature(evaluate).parameters
-        except (TypeError, ValueError):
-            pass
-
+        plane = as_eval_plane(evaluate)
         space = self.space
         coord = self.coordinator
         worklists = plan_worklists(space.ks, self.num_resources, self.order, self.strategy)
@@ -315,10 +314,9 @@ class ThreadPoolScheduler:
                         continue
                     if not should_visit(k):
                         continue
-                    if accepts_abort:
-                        score = evaluate(k, should_abort=lambda kk=k: not should_visit(kk))
-                    else:
-                        score = evaluate(k)
+                    score = plane.evaluate_one(
+                        k, should_abort=lambda kk=k: not should_visit(kk)
+                    )
                     coord.record_visit(k, float(score), rid)
                     lo = k if space.selects(score) else -float("inf")
                     hi = k if space.stops(score) else float("inf")

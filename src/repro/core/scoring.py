@@ -24,16 +24,31 @@ Array = jax.Array
 
 
 def pairwise_sq_dists(x: Array, y: Array | None = None, use_kernel: bool = False) -> Array:
-    """Squared euclidean distances between rows of x (n,d) and y (m,d)."""
+    """Squared euclidean distances between rows of x (..., n, d) and y (..., m, d).
+
+    Leading batch axes broadcast; with ``use_kernel=True`` a 2-D input goes
+    to the tiled Pallas kernel and a 3-D input to its batched (leading-axis)
+    entry point, so the Pallas path stays usable from batched scorers.
+    """
     y = x if y is None else y
     if use_kernel:
         from repro.kernels import ops as kernel_ops
 
-        return kernel_ops.pairwise_sq_dists(x, y)
+        # the kernels take equal-rank operands; materialize the broadcast
+        # the jnp path would do implicitly for mixed 2-D/3-D inputs
+        if x.ndim == 2 and y.ndim == 3:
+            x = jnp.broadcast_to(x, (y.shape[0],) + x.shape)
+        elif x.ndim == 3 and y.ndim == 2:
+            y = jnp.broadcast_to(y, (x.shape[0],) + y.shape)
+        if x.ndim == 2:
+            return kernel_ops.pairwise_sq_dists(x, y)
+        if x.ndim == 3:
+            return kernel_ops.pairwise_sq_dists_batched(x, y)
+        raise ValueError(f"kernel path supports 2-D or 3-D inputs, got {x.ndim}-D")
     # ||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y  with clamping for fp error
-    xx = jnp.sum(x * x, axis=-1)[:, None]
-    yy = jnp.sum(y * y, axis=-1)[None, :]
-    d2 = xx + yy - 2.0 * (x @ y.T)
+    xx = jnp.sum(x * x, axis=-1)[..., :, None]
+    yy = jnp.sum(y * y, axis=-1)[..., None, :]
+    d2 = xx + yy - 2.0 * jnp.matmul(x, jnp.swapaxes(y, -1, -2))
     return jnp.maximum(d2, 0.0)
 
 
@@ -50,8 +65,6 @@ def silhouette_score(x: Array, labels: Array, num_clusters: int, use_kernel: boo
     sizes = jnp.sum(onehot, axis=0)  # (k,)
     # sum of distances from each point to each cluster: (n, k)
     dist_sums = d @ onehot
-    own = onehot[jnp.arange(n), labels]  # ones; keeps grads sane
-    del own
     own_size = sizes[labels]  # (n,)
     # a(i): mean intra-cluster distance excluding self
     a = dist_sums[jnp.arange(n), labels] / jnp.maximum(own_size - 1.0, 1.0)
@@ -86,6 +99,108 @@ def davies_bouldin_score(x: Array, labels: Array, num_clusters: int) -> Array:
     worst = jnp.max(r, axis=1)
     worst = jnp.where(present, worst, 0.0)
     return jnp.sum(worst) / jnp.maximum(jnp.sum(present), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Masked variants — padded batched fits (one vmapped fit serves many k's)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("num_clusters", "use_kernel"))
+def silhouette_samples_masked(
+    x: Array,
+    labels: Array,
+    num_clusters: int,
+    point_mask: Array | None = None,
+    use_kernel: bool = False,
+) -> Array:
+    """Per-point silhouette values; padding points and clusters are zeroed.
+
+    Shapes are axis-agnostic over optional leading batch dims: x (..., n, d),
+    labels (..., n) int, point_mask (..., n) bool (False = padding point,
+    excluded from every cluster; its s(i) is 0). Clusters that end up empty
+    after masking — in particular the padded slots >= k_eff of a mask-padded
+    fit — never appear in b(i) and contribute nothing. Returns s (..., n);
+    both the mean score and NMFk's per-cluster min reduce from this one
+    distance-matrix pass.
+    """
+    d = jnp.sqrt(pairwise_sq_dists(x, use_kernel=use_kernel))  # (..., n, n)
+    mask = (
+        jnp.ones(x.shape[:-1], bool)
+        if point_mask is None
+        else (jnp.zeros(x.shape[:-1], bool) | point_mask)
+    )
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=x.dtype) * mask[..., None]
+    sizes = jnp.sum(onehot, axis=-2)  # (..., k) — active members only
+    dist_sums = jnp.matmul(d, onehot)  # (..., n, k)
+    own_size = jnp.take_along_axis(sizes[..., None, :], labels[..., None], axis=-1)[..., 0]
+    own_sum = jnp.take_along_axis(dist_sums, labels[..., None], axis=-1)[..., 0]
+    a = own_sum / jnp.maximum(own_size - 1.0, 1.0)
+    mean_to = dist_sums / jnp.maximum(sizes[..., None, :], 1.0)
+    mask_own = jax.nn.one_hot(labels, num_clusters, dtype=bool)
+    empty = sizes[..., None, :] == 0  # includes every padded cluster slot
+    big = jnp.asarray(jnp.inf, x.dtype)
+    b = jnp.min(jnp.where(mask_own | empty, big, mean_to), axis=-1)
+    s = (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-12)
+    s = jnp.where(own_size <= 1.0, 0.0, s)  # singleton convention
+    return jnp.where(mask, s, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_clusters", "use_kernel"))
+def silhouette_score_masked(
+    x: Array,
+    labels: Array,
+    num_clusters: int,
+    point_mask: Array | None = None,
+    use_kernel: bool = False,
+) -> Array:
+    """Mean silhouette over active points only; padded clusters are ignored.
+
+    The score at (k_eff, k_pad) equals ``silhouette_score`` at k_eff; see
+    ``silhouette_samples_masked`` for the shape/mask contract.
+    """
+    s = silhouette_samples_masked(x, labels, num_clusters, point_mask, use_kernel)
+    if point_mask is None:
+        return jnp.mean(s, axis=-1)
+    n_active = jnp.sum(jnp.zeros(x.shape[:-1], bool) | point_mask, axis=-1)
+    return jnp.sum(s, axis=-1) / jnp.maximum(n_active, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_clusters",))
+def davies_bouldin_score_masked(
+    x: Array,
+    labels: Array,
+    num_clusters: int,
+    cluster_mask: Array | None = None,
+    point_mask: Array | None = None,
+) -> Array:
+    """Davies-Bouldin index ignoring padded clusters (and padding points).
+
+    Axis-agnostic over leading batch dims like ``silhouette_score_masked``.
+    ``cluster_mask`` (..., k) marks the active centroid slots of a
+    mask-padded fit (slots >= k_eff are False); inactive or empty clusters
+    are excluded from both the pairwise-worst max and the final mean.
+    """
+    mask = (
+        jnp.ones(x.shape[:-1], bool) if point_mask is None else jnp.broadcast_to(point_mask, x.shape[:-1])
+    )
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=x.dtype) * mask[..., None]
+    if cluster_mask is not None:
+        onehot = onehot * cluster_mask[..., None, :].astype(x.dtype)
+    counts = jnp.sum(onehot, axis=-2)  # (..., k)
+    sizes = jnp.maximum(counts, 1.0)
+    centroids = jnp.matmul(jnp.swapaxes(onehot, -1, -2), x) / sizes[..., None]
+    d_to_c = jnp.sqrt(pairwise_sq_dists(x, centroids))  # (..., n, k)
+    own_d = jnp.sum(d_to_c * onehot, axis=-1)  # (..., n)
+    scatter = jnp.matmul(jnp.swapaxes(onehot, -1, -2), own_d[..., None])[..., 0] / sizes
+    m = jnp.sqrt(pairwise_sq_dists(centroids))  # (..., k, k)
+    r = (scatter[..., :, None] + scatter[..., None, :]) / jnp.maximum(m, 1e-12)
+    r = jnp.where(jnp.eye(num_clusters, dtype=bool), -jnp.inf, r)
+    present = counts > 0
+    if cluster_mask is not None:
+        present = present & cluster_mask
+    r = jnp.where(present[..., None, :], r, -jnp.inf)
+    worst = jnp.max(r, axis=-1)
+    worst = jnp.where(present, worst, 0.0)
+    return jnp.sum(worst, axis=-1) / jnp.maximum(jnp.sum(present, axis=-1), 1.0)
 
 
 # --------------------------------------------------------------------------

@@ -4,9 +4,23 @@ from .distributed import (  # noqa: F401
     distributed_rescal,
     make_local_mesh,
 )
-from .kmeans import KMeansResult, kmeans, kmeans_multi_restart  # noqa: F401
-from .nmf import NMFResult, mu_step, nmf, nmf_chunked, reconstruction_error  # noqa: F401
-from .nmfk import NMFkScore, make_nmfk_evaluator, nmfk_score  # noqa: F401
+from .kmeans import KMeansResult, kmeans, kmeans_batched, kmeans_multi_restart  # noqa: F401
+from .nmf import (  # noqa: F401
+    NMFResult,
+    mu_step,
+    nmf,
+    nmf_batched,
+    nmf_chunked,
+    nmf_init,
+    reconstruction_error,
+)
+from .nmfk import (  # noqa: F401
+    NMFkScore,
+    make_nmfk_evaluator,
+    nmfk_score,
+    nmfk_score_batched,
+)
+from .planes import KMeansBatchPlane, NMFkBatchPlane  # noqa: F401
 from .rescal import (  # noqa: F401
     RESCALResult,
     make_rescalk_evaluator,

@@ -1,0 +1,33 @@
+"""Shared lane layout for the mask-padded ``*_batched`` entry points.
+
+All three batched fits (``kmeans_batched``, ``nmf_batched``,
+``nmfk_score_batched``) promise the same contract: lane i uses
+``fold_in(key, ks[i])`` — matching the per-k evaluators' key schedule —
+and every lane runs at a common padded rank ``k_pad >= max(ks)``. Keeping
+the validation and key derivation here stops the schedule (which the
+batched-vs-per-k equivalence tests depend on) from drifting between entry
+points.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_lanes(
+    ks: Sequence[int], key: jax.Array, k_pad: int | None
+) -> tuple[jax.Array, jax.Array, int]:
+    """Validate ``ks``/``k_pad`` and derive per-lane keys.
+
+    Returns (ks_arr (b,), keys (b, 2), k_pad) with keys[i] = fold_in(key, ks[i]).
+    """
+    ks = [int(k) for k in ks]
+    if not ks:
+        raise ValueError("ks must be non-empty")
+    k_pad = max(ks) if k_pad is None else k_pad
+    if k_pad < max(ks):
+        raise ValueError(f"k_pad={k_pad} smaller than max(ks)={max(ks)}")
+    keys = jnp.stack([jax.random.fold_in(key, k) for k in ks])
+    return jnp.asarray(ks), keys, k_pad

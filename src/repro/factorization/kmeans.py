@@ -2,16 +2,26 @@
 
 Used (a) as the paper's K-Means experiment substrate (Davies-Bouldin,
 minimization task), and (b) inside NMFk's custom W-column clustering.
+
+``kmeans_batched`` is the wavefront-executor entry point: centroids are
+padded to a common ``k_pad``, inactive slots are masked out of assignment /
+update / convergence, and the whole fit is vmapped over the k axis — one
+jit compilation at ``k_pad`` serves every k in a wave. The masked fit is
+draw-for-draw identical to the per-k fit (the padded slots consume the same
+key-split schedule but their draws are discarded), so lane i reproduces
+``kmeans(x, ks[i], fold_in(key, ks[i]))``.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.scoring import pairwise_sq_dists
+
+from .batching import batched_lanes
 
 Array = jax.Array
 
@@ -89,6 +99,99 @@ def kmeans(
     )
     labels, inertia = assign(centers)
     return KMeansResult(centers, labels, inertia, iters)
+
+
+def _masked_kmeanspp_init(key: Array, x: Array, k_eff: Array, k_pad: int) -> Array:
+    """k-means++ at padded width: slots >= k_eff stay zero, draws for them
+    are burned (not applied) so active-slot draws match the per-k init."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centers0 = jnp.zeros((k_pad, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        centers, key = carry
+        d2 = pairwise_sq_dists(x, centers)  # (n, k_pad)
+        mask = jnp.arange(k_pad) < jnp.minimum(i, k_eff)
+        d2 = jnp.where(mask[None, :], d2, jnp.inf)
+        dmin = jnp.min(d2, axis=1)
+        key, sub = jax.random.split(key)
+        p = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        idx = jax.random.choice(sub, n, p=p)
+        centers = jnp.where(i < k_eff, centers.at[i].set(x[idx]), centers)
+        return centers, key
+
+    centers, _ = jax.lax.fori_loop(1, k_pad, body, (centers0, key))
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "max_iters"))
+def _kmeans_masked(
+    x: Array,
+    k_eff: Array,
+    key: Array,
+    k_pad: int,
+    max_iters: int = 100,
+    tol: float = 1e-6,
+) -> KMeansResult:
+    """Lloyd's algorithm on k_pad slots of which only the first k_eff live."""
+    active = jnp.arange(k_pad) < k_eff  # (k_pad,)
+    centers = _masked_kmeanspp_init(key, x, k_eff, k_pad)
+
+    def assign(centers):
+        d2 = pairwise_sq_dists(x, centers)
+        d2 = jnp.where(active[None, :], d2, jnp.inf)
+        labels = jnp.argmin(d2, axis=1)
+        inertia = jnp.sum(jnp.min(d2, axis=1))
+        return labels, inertia
+
+    def cond(carry):
+        _, _, delta, it = carry
+        return jnp.logical_and(delta > tol, it < max_iters)
+
+    def body(carry):
+        centers, _, _, it = carry
+        labels, _ = assign(centers)
+        onehot = jax.nn.one_hot(labels, k_pad, dtype=x.dtype)  # (n, k_pad)
+        counts = jnp.sum(onehot, axis=0)
+        sums = onehot.T @ x
+        new_centers = sums / jnp.maximum(counts[:, None], 1.0)
+        # re-seed empty *active* clusters at the farthest point
+        d2 = pairwise_sq_dists(x, new_centers)
+        d2 = jnp.where(active[None, :], d2, jnp.inf)
+        far_idx = jnp.argmax(jnp.min(d2, axis=1))
+        new_centers = jnp.where(
+            (counts[:, None] == 0) & active[:, None], x[far_idx][None, :], new_centers
+        )
+        new_centers = jnp.where(active[:, None], new_centers, 0.0)
+        delta = jnp.max(jnp.abs(new_centers - centers) * active[:, None])
+        return new_centers, labels, delta, it + 1
+
+    labels0, _ = assign(centers)
+    centers, labels, _, iters = jax.lax.while_loop(
+        cond, body, (centers, labels0, jnp.asarray(jnp.inf, x.dtype), jnp.asarray(0))
+    )
+    labels, inertia = assign(centers)
+    return KMeansResult(centers, labels, inertia, iters)
+
+
+def kmeans_batched(
+    x: Array,
+    ks: Sequence[int],
+    key: Array,
+    k_pad: int | None = None,
+    max_iters: int = 100,
+) -> KMeansResult:
+    """Fit every k in ``ks`` as one padded vmapped K-Means.
+
+    Returns a KMeansResult with a leading batch axis aligned with ``ks``:
+    centroids (b, k_pad, d) — slots >= ks[i] are zero, labels (b, n) in
+    [0, ks[i]). Lane i matches ``kmeans(x, ks[i], fold_in(key, ks[i]))``.
+    """
+    ks_arr, keys, k_pad = batched_lanes(ks, key, k_pad)
+    return jax.vmap(
+        lambda k_eff, sub: _kmeans_masked(x, k_eff, sub, k_pad, max_iters)
+    )(ks_arr, keys)
 
 
 def kmeans_multi_restart(

@@ -22,10 +22,12 @@ distributed NMF optimizes on GPU, re-tiled for TPU VMEM/MXU.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from .batching import batched_lanes
 
 Array = jax.Array
 _EPS = 1e-9
@@ -38,12 +40,25 @@ class NMFResult(NamedTuple):
     iters: Array
 
 
-def _init_wh(key: Array, n: int, m: int, k: int, v_mean: Array, dtype) -> tuple[Array, Array]:
+def nmf_init(
+    key: Array, n: int, m: int, k: int, v_mean: Array, dtype, k_pad: int | None = None
+) -> tuple[Array, Array]:
+    """Scaled-uniform W/H init.
+
+    With ``k_pad`` the draw happens at the padded rank and is sliced to k —
+    exactly the active block a mask-padded batched fit (``nmf_batched``)
+    initializes from for the same key, which is what makes per-k and
+    batched fits comparable factor-for-factor.
+    """
     kw, kh = jax.random.split(key)
     scale = jnp.sqrt(jnp.maximum(v_mean, _EPS) / k)
-    w = scale * jax.random.uniform(kw, (n, k), dtype, 0.1, 1.0)
-    h = scale * jax.random.uniform(kh, (k, m), dtype, 0.1, 1.0)
+    kd = k if k_pad is None else k_pad
+    w = scale * jax.random.uniform(kw, (n, kd), dtype, 0.1, 1.0)[:, :k]
+    h = scale * jax.random.uniform(kh, (kd, m), dtype, 0.1, 1.0)[:k, :]
     return w, h
+
+
+_init_wh = nmf_init
 
 
 def mu_step(v: Array, w: Array, h: Array, use_kernel: bool = False) -> tuple[Array, Array]:
@@ -68,10 +83,21 @@ def nmf(
     key: Array,
     iters: int = 200,
     use_kernel: bool = False,
+    w0: Array | None = None,
+    h0: Array | None = None,
 ) -> NMFResult:
-    """Jit'd NMF: fixed iteration count (TPU-friendly, no host sync)."""
+    """Jit'd NMF: fixed iteration count (TPU-friendly, no host sync).
+
+    ``w0``/``h0`` override the random init (both or neither) — used to seed
+    a per-k fit with the exact active block of a padded batched init.
+    """
     n, m = v.shape
-    w, h = _init_wh(key, n, m, k, jnp.mean(v), v.dtype)
+    if (w0 is None) != (h0 is None):
+        raise ValueError("pass both w0 and h0, or neither")
+    if w0 is None:
+        w, h = nmf_init(key, n, m, k, jnp.mean(v), v.dtype)
+    else:
+        w, h = w0, h0
 
     def body(_, wh):
         return mu_step(v, *wh, use_kernel=use_kernel)
@@ -79,6 +105,63 @@ def nmf(
     w, h = jax.lax.fori_loop(0, iters, body, (w, h))
     err = jnp.linalg.norm(v - w @ h) / jnp.maximum(jnp.linalg.norm(v), _EPS)
     return NMFResult(w, h, err, jnp.asarray(iters))
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "iters", "use_kernel"))
+def _nmf_masked(
+    v: Array,
+    k_eff: Array,
+    key: Array,
+    k_pad: int,
+    iters: int = 200,
+    use_kernel: bool = False,
+) -> NMFResult:
+    """NMF at padded rank k_pad with components >= k_eff zero-masked.
+
+    Lee-Seung updates preserve zeros (H rows / W columns multiply by
+    themselves), so masking the init is enough for exactness; we still
+    re-mask each sweep to stop eps-sized drift from re-seeding dead
+    components over hundreds of iterations.
+    """
+    n, m = v.shape
+    active = jnp.arange(k_pad) < k_eff
+    kw, kh = jax.random.split(key)
+    scale = jnp.sqrt(jnp.maximum(jnp.mean(v), _EPS) / k_eff)
+    w = scale * jax.random.uniform(kw, (n, k_pad), v.dtype, 0.1, 1.0)
+    h = scale * jax.random.uniform(kh, (k_pad, m), v.dtype, 0.1, 1.0)
+    w = w * active[None, :]
+    h = h * active[:, None]
+
+    def body(_, wh):
+        w, h = mu_step(v, *wh, use_kernel=use_kernel)
+        return w * active[None, :], h * active[:, None]
+
+    w, h = jax.lax.fori_loop(0, iters, body, (w, h))
+    err = jnp.linalg.norm(v - w @ h) / jnp.maximum(jnp.linalg.norm(v), _EPS)
+    return NMFResult(w, h, err, jnp.asarray(iters))
+
+
+def nmf_batched(
+    v: Array,
+    ks: Sequence[int],
+    key: Array,
+    k_pad: int | None = None,
+    iters: int = 200,
+    use_kernel: bool = False,
+) -> NMFResult:
+    """Fit every rank in ``ks`` as one padded vmapped NMF.
+
+    Returns an NMFResult with a leading batch axis aligned with ``ks``:
+    w (b, n, k_pad) / h (b, k_pad, m) with components >= ks[i] zeroed. One
+    jit compilation at (k_pad, len(ks)) serves every rank in the wave. Lane
+    i reproduces ``nmf(v, ks[i], sub, w0=w0, h0=h0)`` for
+    ``sub = fold_in(key, ks[i])`` and ``w0, h0 = nmf_init(sub, n, m, ks[i],
+    v.mean(), v.dtype, k_pad=k_pad)``.
+    """
+    ks_arr, keys, k_pad = batched_lanes(ks, key, k_pad)
+    return jax.vmap(
+        lambda k_eff, sub: _nmf_masked(v, k_eff, sub, k_pad, iters, use_kernel)
+    )(ks_arr, keys)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk", "use_kernel"))

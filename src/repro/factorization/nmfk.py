@@ -21,14 +21,15 @@ component gates stability), along with mean silhouette and relative error.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.scoring import silhouette_score
+from repro.core.scoring import silhouette_samples_masked, silhouette_score
 
-from .nmf import nmf
+from .batching import batched_lanes
+from .nmf import _nmf_masked, nmf
 
 Array = jax.Array
 
@@ -123,6 +124,104 @@ def nmfk_score(
     min_sil = jnp.where(k > 1, jnp.min(per_cluster), 1.0)
     sil_mean = jnp.where(k > 1, sil_mean, 1.0)
     return NMFkScore(min_sil, sil_mean, jnp.mean(errs))
+
+
+def _align_columns_masked(w_all: Array, k_eff: Array) -> Array:
+    """``_align_columns`` at padded width: only the first k_eff columns of
+    each perturbation participate; padded columns keep their own index as a
+    throwaway label (their points are masked out of the scorer)."""
+    p, n, k_pad = w_all.shape
+    ref = w_all[0]
+    valid = jnp.arange(k_pad) < k_eff  # (k_pad,)
+
+    def match_one(w_p):
+        sim = ref.T @ w_p  # (k_ref, k_cols)
+        sim = jnp.where(valid[:, None] & valid[None, :], sim, -jnp.inf)
+
+        def body(t, carry):
+            assign, sim_m = carry
+            flat = jnp.argmax(sim_m)
+            i, j = flat // k_pad, flat % k_pad
+            ok = t < k_eff
+            assign = jnp.where(ok, assign.at[j].set(i.astype(jnp.int32)), assign)
+            sim_m = jnp.where(ok, sim_m.at[i, :].set(-jnp.inf).at[:, j].set(-jnp.inf), sim_m)
+            return assign, sim_m
+
+        assign0 = jnp.arange(k_pad, dtype=jnp.int32)  # padded cols -> own slot
+        assign, _ = jax.lax.fori_loop(0, k_pad, body, (assign0, sim))
+        return assign
+
+    assigns = jax.vmap(match_one)(w_all)  # (p, k_pad)
+    return assigns.reshape(p * k_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "n_perturbs", "nmf_iters"))
+def _nmfk_score_masked(
+    v: Array,
+    k_eff: Array,
+    key: Array,
+    k_pad: int,
+    n_perturbs: int = 8,
+    nmf_iters: int = 150,
+    epsilon: float = 0.015,
+) -> NMFkScore:
+    """``nmfk_score`` with the rank padded to k_pad and masked to k_eff.
+
+    All shapes depend only on (k_pad, n_perturbs, nmf_iters), so one jit
+    compilation serves every rank in a wavefront batch. At k_eff == k_pad
+    the perturbation and init draws coincide with ``nmfk_score``'s.
+    """
+    kp, kf = jax.random.split(key)
+    pkeys = jax.random.split(kp, n_perturbs)
+    fkeys = jax.random.split(kf, n_perturbs)
+    active = jnp.arange(k_pad) < k_eff
+
+    def fit_one(pk, fk):
+        vp = _perturb(pk, v, epsilon)
+        res = _nmf_masked(vp, k_eff, fk, k_pad, iters=nmf_iters)
+        return res.w, res.rel_error
+
+    w_all, errs = jax.vmap(fit_one)(pkeys, fkeys)  # (p, n, k_pad), (p,)
+    w_all = w_all / jnp.maximum(jnp.linalg.norm(w_all, axis=1, keepdims=True), 1e-12)
+    labels = _align_columns_masked(w_all, k_eff)  # (p*k_pad,)
+    cols = jnp.transpose(w_all, (0, 2, 1)).reshape(-1, v.shape[0])  # (p*k_pad, n)
+    point_mask = jnp.tile(active, n_perturbs)  # (p*k_pad,)
+    # one distance-matrix pass yields both statistics: mean over active
+    # points and NMFk's per-cluster min over active clusters
+    s = silhouette_samples_masked(cols, labels, num_clusters=k_pad, point_mask=point_mask)
+    sil_mean = jnp.sum(s) / jnp.maximum(jnp.sum(point_mask), 1.0)
+    onehot = jax.nn.one_hot(labels, k_pad, dtype=cols.dtype) * point_mask[:, None]
+    sizes = jnp.sum(onehot, axis=0)
+    per_cluster = (onehot.T @ s) / jnp.maximum(sizes, 1.0)
+    min_sil = jnp.min(jnp.where(active, per_cluster, jnp.inf))
+    # k=1: single cluster, silhouette undefined -> 1.0 (stable)
+    min_sil = jnp.where(k_eff > 1, min_sil, 1.0)
+    sil_mean = jnp.where(k_eff > 1, sil_mean, 1.0)
+    return NMFkScore(min_sil, sil_mean, jnp.mean(errs))
+
+
+def nmfk_score_batched(
+    v: Array,
+    ks: Sequence[int],
+    key: Array,
+    k_pad: int | None = None,
+    n_perturbs: int = 8,
+    nmf_iters: int = 150,
+    epsilon: float = 0.015,
+) -> NMFkScore:
+    """Score every rank in ``ks`` as one padded vmapped NMFk ensemble.
+
+    Returns an NMFkScore whose fields carry a leading batch axis aligned
+    with ``ks``. Lane i uses ``fold_in(key, ks[i])`` — the same key schedule
+    as ``make_nmfk_evaluator`` — so at k_pad == ks[i] the scalar and batched
+    scores coincide.
+    """
+    ks_arr, keys, k_pad = batched_lanes(ks, key, k_pad)
+    return jax.vmap(
+        lambda k_eff, sub: _nmfk_score_masked(
+            v, k_eff, sub, k_pad, n_perturbs=n_perturbs, nmf_iters=nmf_iters, epsilon=epsilon
+        )
+    )(ks_arr, keys)
 
 
 def make_nmfk_evaluator(

@@ -1,0 +1,168 @@
+"""Batched evaluation planes: mask-padded multi-k fits behind ``EvalPlane``.
+
+These are the hardware-shaped back ends of the wavefront executor
+(``repro.core.evalplane.WavefrontScheduler``): a whole frontier of k values
+becomes ONE vmapped, jit'd fit at a common padded rank, so the per-k
+trace/JIT/dispatch cost the thread path pays |wave| times is paid once.
+
+Shape discipline (what keeps compile counts ~O(1) instead of O(|K|)):
+
+  * the rank axis is padded to a fixed ``k_pad`` (default: the largest k
+    the plane will ever see — pass the top of the search range);
+  * the batch axis is padded to the next power of two (duplicating the
+    first k; duplicate lanes are discarded), so every wave of similar size
+    reuses the same compiled executable. ``WavefrontScheduler(max_wave=N)``
+    sets the plane's ``dispatch_cap`` so this padding never exceeds an
+    explicit memory bound; ``pad_batch=False`` disables it entirely.
+
+``shapes_compiled`` records the distinct (batch, k_pad) shapes dispatched —
+a deterministic proxy for jit compilations that the wavefront benchmark
+compares against the thread path's one-compilation-per-distinct-k.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kmeans import kmeans_batched
+from .nmfk import nmfk_score_batched
+
+Array = jax.Array
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class _BatchPlaneBase:
+    """Shared padding / accounting for the batched factorization planes."""
+
+    def __init__(self, k_pad: int | None, pad_batch: bool):
+        self.k_pad = k_pad
+        self.pad_batch = pad_batch
+        # dispatch cap (number of lanes per batch). WavefrontScheduler sets
+        # this to its max_wave so pow2 batch padding never exceeds the
+        # device-memory bound the cap was chosen for.
+        self.dispatch_cap: int | None = None
+        self.n_dispatches = 0
+        self.n_evals = 0
+        self.shapes_compiled: set[tuple[int, int]] = set()
+
+    def _pad_ks(self, ks: Sequence[int]) -> tuple[list[int], int, int]:
+        ks = [int(k) for k in ks]
+        if not ks:
+            raise ValueError("evaluate_batch needs at least one k")
+        k_pad = self.k_pad if self.k_pad is not None else max(ks)
+        if k_pad < max(ks):
+            raise ValueError(f"plane k_pad={k_pad} smaller than requested k={max(ks)}")
+        n_real = len(ks)
+        if self.pad_batch:
+            target = _next_pow2(n_real)
+            if self.dispatch_cap is not None:
+                target = max(n_real, min(target, self.dispatch_cap))
+            ks = ks + [ks[0]] * (target - n_real)
+        self.n_dispatches += 1
+        self.n_evals += n_real
+        self.shapes_compiled.add((len(ks), k_pad))
+        return ks, k_pad, n_real
+
+    def evaluate_one(self, k: int, should_abort=None) -> float:
+        del should_abort  # one fused dispatch; no chunk boundary to poll
+        return self.evaluate_batch([k])[0]
+
+
+class NMFkBatchPlane(_BatchPlaneBase):
+    """NMFk stability scoring of a whole wave as one padded vmapped ensemble.
+
+    Per-lane RNG is ``fold_in(key, k)`` — the same schedule as
+    ``make_nmfk_evaluator`` — so the batched and threaded executors agree
+    on the score landscape (exactly at k == k_pad, to init-draw noise
+    below it).
+    """
+
+    def __init__(
+        self,
+        v: Array,
+        key: Array,
+        n_perturbs: int = 8,
+        nmf_iters: int = 150,
+        epsilon: float = 0.015,
+        statistic: str = "min",
+        k_pad: int | None = None,
+        pad_batch: bool = True,
+    ):
+        super().__init__(k_pad, pad_batch)
+        if statistic not in ("min", "mean"):
+            raise ValueError(f"statistic must be 'min' or 'mean', got {statistic!r}")
+        self.v = v
+        self.key = key
+        self.n_perturbs = n_perturbs
+        self.nmf_iters = nmf_iters
+        self.epsilon = epsilon
+        self.statistic = statistic
+
+    def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
+        padded, k_pad, n_real = self._pad_ks(ks)
+        sc = nmfk_score_batched(
+            self.v,
+            padded,
+            self.key,
+            k_pad=k_pad,
+            n_perturbs=self.n_perturbs,
+            nmf_iters=self.nmf_iters,
+            epsilon=self.epsilon,
+        )
+        scores = sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette
+        return [float(s) for s in scores[:n_real]]
+
+
+class KMeansBatchPlane(_BatchPlaneBase):
+    """K-Means Davies-Bouldin (minimize) or silhouette (maximize) per wave.
+
+    Lane i reproduces ``kmeans(x, ks[i], fold_in(key, ks[i]))`` exactly
+    (masked fits are draw-for-draw identical to per-k fits), so this plane
+    matches a threaded K-Means evaluator score-for-score.
+    """
+
+    def __init__(
+        self,
+        x: Array,
+        key: Array,
+        score: str = "davies_bouldin",
+        max_iters: int = 100,
+        k_pad: int | None = None,
+        pad_batch: bool = True,
+    ):
+        super().__init__(k_pad, pad_batch)
+        if score not in ("davies_bouldin", "silhouette"):
+            raise ValueError(f"score must be 'davies_bouldin' or 'silhouette', got {score!r}")
+        self.x = x
+        self.key = key
+        self.score = score
+        self.max_iters = max_iters
+
+    def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
+        from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
+
+        padded, k_pad, n_real = self._pad_ks(ks)
+        res = kmeans_batched(self.x, padded, self.key, k_pad=k_pad, max_iters=self.max_iters)
+        ks_arr = jnp.asarray(padded)
+        cluster_mask = jnp.arange(k_pad)[None, :] < ks_arr[:, None]  # (b, k_pad)
+        # x stays unbatched (n, d): the masked scorers broadcast it against
+        # the batched labels, so the point-pairwise work is done once, not
+        # once per lane.
+        if self.score == "davies_bouldin":
+            scores = davies_bouldin_score_masked(
+                self.x, res.labels, k_pad, cluster_mask=cluster_mask
+            )
+        else:
+            scores = silhouette_score_masked(self.x, res.labels, k_pad)
+        return [float(s) for s in scores[:n_real]]
+
+
+__all__ = ["NMFkBatchPlane", "KMeansBatchPlane"]

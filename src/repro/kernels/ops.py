@@ -81,6 +81,28 @@ def pairwise_sq_dists(x: jax.Array, y: jax.Array | None = None, interpret: bool 
     return out[:n, :m]
 
 
+def pairwise_sq_dists_batched(
+    x: jax.Array, y: jax.Array | None = None, interpret: bool | None = None
+) -> jax.Array:
+    """Leading-axis batched pairwise distances: x (b, n, d), y (b, m, d).
+
+    One kernel launch covers all b lanes — the entry point batched scorers
+    use instead of vmapping the 2-D kernel. Zero padding of n/m/d to tile
+    multiples is exact for distances; callers slice the result.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    y = x if y is None else y
+    _, n, d = x.shape
+    m = y.shape[1]
+    bn = 128 if n % 128 == 0 else 8
+    bm = 128 if m % 128 == 0 else 8
+    bd = 128 if d % 128 == 0 else 8
+    xp = _pad_to(_pad_to(x, 1, bn), 2, bd)
+    yp = _pad_to(_pad_to(y, 1, bm), 2, bd)
+    out = _pd.pairwise_sq_dists_batched(xp, yp, bn=bn, bm=bm, bd=bd, interpret=interpret)
+    return out[:, :n, :m]
+
+
 # -----------------------------------------------------------------------------
 # Flash attention
 # -----------------------------------------------------------------------------

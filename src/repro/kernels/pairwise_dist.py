@@ -72,6 +72,61 @@ def pairwise_sq_dists(
     )(x, y)
 
 
+def _batched_pairwise_kernel(x_ref, y_ref, out_ref, acc_ref, *, n_steps: int):
+    """Grid = (batch, n_tiles, m_tiles, d_steps) — same tile walk as the 2-D
+    kernel with a leading batch-lane dimension, so one launch covers every
+    lane of a padded wavefront (e.g. the pooled W columns of each k in a
+    batched NMFk wave)."""
+    step = pl.program_id(3)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (bn, bd)
+    y = y_ref[0].astype(jnp.float32)  # (bm, bd)
+    acc_ref[...] += (
+        jax.lax.dot_general(
+            x, y, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * -2.0
+        + jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+    )
+
+    @pl.when(step == n_steps - 1)
+    def _finalize():
+        out_ref[0] = jnp.maximum(acc_ref[...], 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bd", "interpret"))
+def pairwise_sq_dists_batched(
+    x: jax.Array,  # (b, n, d)
+    y: jax.Array,  # (b, m, d)
+    bn: int = 128,
+    bm: int = 128,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n, d = x.shape
+    m = y.shape[1]
+    assert y.shape[0] == b and n % bn == 0 and m % bm == 0 and d % bd == 0, (b, n, m, d)
+    n_steps = d // bd
+    grid = (b, n // bn, m // bm, n_steps)
+    return pl.pallas_call(
+        functools.partial(_batched_pairwise_kernel, n_steps=n_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), lambda l, i, j, s: (l, i, s)),
+            pl.BlockSpec((1, bm, bd), lambda l, i, j, s: (l, j, s)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, bm), lambda l, i, j, s: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n, m), jnp.float32),
+        scratch_shapes=[_vmem((bn, bm))],
+        interpret=interpret,
+    )(x, y)
+
+
 def _vmem(shape):
     from jax.experimental.pallas import tpu as pltpu
 

@@ -73,9 +73,12 @@ def _shape_bytes_between(line: str, start: int, end: int) -> int:
     return sum(_bytes_of(dt, dims) for dt, dims in _SHAPE_RE.findall(line[start:end]))
 
 
+# operand may carry an inline type prefix (`dot(f32[16,16]{1,0} %lhs, ...)`,
+# newer XLA text) or not (`dot(%lhs, ...)`)
 _DOT_LINE_RE = re.compile(
     r"^\s+(?:ROOT\s+)?%?[\w.\-$]+\s*=\s*"
-    r"(bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8)\[([0-9,]*)\]\S*\s+dot\(%?([\w.\-$]+),"
+    r"(bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8)\[([0-9,]*)\]\S*\s+dot\("
+    r"(?:[a-z0-9]+\[[0-9,]*\]\S*\s+)?%?([\w.\-$]+),"
 )
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-$]+)")

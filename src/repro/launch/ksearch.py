@@ -30,10 +30,12 @@ from repro.core import (
     InProcessCoordinator,
     SearchSpace,
     ThreadPoolScheduler,
+    WavefrontScheduler,
     make_space,
 )
 from repro.factorization.distributed import distributed_nmf, make_local_mesh
 from repro.factorization.nmfk import nmfk_score
+from repro.factorization.planes import NMFkBatchPlane
 from repro.factorization.synthetic import nmf_data
 
 
@@ -66,6 +68,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--journal", default=None, help="dir for FileCoordinator (restartable)")
     ap.add_argument("--distributed-fit", action="store_true",
                     help="run each NMF fit via shard_map over the resource's sub-mesh")
+    ap.add_argument("--executor", default="threads", choices=["threads", "batched"],
+                    help="threads: one fit per k per worker; batched: wavefront "
+                    "frontiers as one padded vmapped NMFk fit per wave")
+    ap.add_argument("--max-wave", type=int, default=None,
+                    help="cap ks per batched dispatch (batched executor only)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -89,19 +96,40 @@ def main(argv=None) -> dict:
         args.threshold,
         args.stop_threshold if args.early_stop else None,
     )
-    visited: set[int] = set()
-    if args.journal:
-        coord = FileCoordinator(args.journal)
-        bounds, visited = coord.replay(space.selects, space.stops)
-        if visited and not args.quiet:
-            print(f"restart: {len(visited)} k already journaled, bounds {bounds}")
-    else:
-        coord = InProcessCoordinator()
 
-    t0 = time.time()
-    sched = ThreadPoolScheduler(space, args.resources, order=args.order, coordinator=coord)
-    result = sched.run(evaluate, skip=visited)
-    dt = time.time() - t0
+    if args.executor == "batched":
+        if not args.quiet:
+            ignored = (
+                ("--journal", args.journal),
+                ("--distributed-fit", args.distributed_fit),
+                ("--order", args.order != "pre"),
+                ("--resources", args.resources != ap.get_default("resources")),
+            )
+            for flag, used in ignored:
+                if used:
+                    print(f"note: {flag} is ignored by the batched executor")
+        plane = NMFkBatchPlane(
+            v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters, k_pad=args.k_max
+        )
+        sched = WavefrontScheduler(space, max_wave=args.max_wave)
+        t0 = time.time()
+        result = sched.run(plane)
+        dt = time.time() - t0
+        extra = {"waves": sched.n_dispatches, "compiled_shapes": sorted(plane.shapes_compiled)}
+    else:
+        visited: set[int] = set()
+        if args.journal:
+            coord = FileCoordinator(args.journal)
+            bounds, visited = coord.replay(space.selects, space.stops)
+            if visited and not args.quiet:
+                print(f"restart: {len(visited)} k already journaled, bounds {bounds}")
+        else:
+            coord = InProcessCoordinator()
+        sched = ThreadPoolScheduler(space, args.resources, order=args.order, coordinator=coord)
+        t0 = time.time()
+        result = sched.run(evaluate, skip=visited)
+        dt = time.time() - t0
+        extra = {"resources": args.resources}
 
     out = {
         "k_optimal": result.k_optimal,
@@ -111,7 +139,8 @@ def main(argv=None) -> dict:
         "n_candidates": result.n_candidates,
         "visit_fraction": round(result.visit_fraction, 3),
         "seconds": round(dt, 2),
-        "resources": args.resources,
+        "executor": args.executor,
+        **extra,
     }
     if not args.quiet:
         print(json.dumps(out, indent=1))

@@ -1,0 +1,145 @@
+"""Shared test configuration.
+
+Installs a minimal ``hypothesis`` fallback stub when the real package is
+absent, so the property-test modules collect and run from a clean checkout
+(the real hypothesis ships in the ``dev`` extra and is preferred — the stub
+degrades ``@given`` to deterministic seeded random sampling with no
+shrinking).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _MAX_EXAMPLES_CAP = 30  # stub has no shrinking; keep sampling cheap
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: None)
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data`` fixture."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _none():
+        return _just(None)
+
+    def _one_of(*options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))].example(rng))
+
+    def _lists(elements, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            if not unique:
+                return [elements.example(rng) for _ in range(size)]
+            out, seen, attempts = [], set(), 0
+            while len(out) < size and attempts < 50 * max(size, 1):
+                v = elements.example(rng)
+                attempts += 1
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return out
+
+        return _Strategy(draw)
+
+    def _permutations(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: rng.sample(items, len(items)))
+
+    def _builds(target, **kwargs):
+        return _Strategy(
+            lambda rng: target(**{name: s.example(rng) for name, s in kwargs.items()})
+        )
+
+    def _data():
+        return _DataStrategy()
+
+    def _settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*args, **strategies):
+        if args:
+            raise TypeError("hypothesis stub supports keyword strategies only")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*wargs, **wkwargs):
+                n = min(getattr(fn, "_stub_max_examples", 20), _MAX_EXAMPLES_CAP)
+                seed0 = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+                for i in range(n):
+                    rng = random.Random(seed0 + i)
+                    drawn = {}
+                    for name, strat in strategies.items():
+                        if isinstance(strat, _DataStrategy):
+                            drawn[name] = _DataObject(rng)
+                        else:
+                            drawn[name] = strat.example(rng)
+                    fn(*wargs, **wkwargs, **drawn)
+
+            # Hide the strategy-filled params from pytest so it doesn't treat
+            # them as fixtures (hypothesis does the same signature surgery).
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values() if p.name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _st.just = _just
+    _st.none = _none
+    _st.one_of = _one_of
+    _st.lists = _lists
+    _st.permutations = _permutations
+    _st.builds = _builds
+    _st.data = _data
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__stub__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,249 @@
+"""Evaluation plane: wavefront executor + mask-padded batched fits."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ScalarEvalPlane,
+    WavefrontScheduler,
+    as_eval_plane,
+    binary_bleed_search,
+    binary_bleed_worklist,
+    make_space,
+)
+from repro.core.scoring import (
+    davies_bouldin_score,
+    davies_bouldin_score_masked,
+    silhouette_score,
+    silhouette_score_masked,
+)
+from repro.core.traversal import traversal_sort
+from repro.factorization.kmeans import kmeans, kmeans_batched
+from repro.factorization.nmf import nmf, nmf_batched, nmf_init
+from repro.factorization.synthetic import blob_data, nmf_data
+
+KEY = jax.random.PRNGKey(0)
+
+
+def square_wave(k0):
+    return lambda k: 1.0 if k <= k0 else 0.0
+
+
+def laplacian(k0, width=2.0):
+    return lambda k: math.exp(-abs(k - k0) / width)
+
+
+# ---------------------------------------------------------------------------
+# (a) WavefrontScheduler vs the serial worklist driver
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k0", [2, 5, 16, 24, 30])
+def test_wavefront_squarewave_matches_serial(k0):
+    space = make_space((2, 30), 0.7)
+    sched = WavefrontScheduler(space)
+    res = sched.run(square_wave(k0))
+    ser = binary_bleed_worklist(space, square_wave(k0), order="pre")
+    assert res.k_optimal == ser.k_optimal == k0
+    worklist = traversal_sort(sorted(space.ks), "pre")
+    assert set(res.visited_ks) <= set(worklist)
+    assert res.n_visited <= len(space.ks)
+    assert sched.n_dispatches <= math.ceil(math.log2(len(space.ks))) + 1
+
+
+@pytest.mark.parametrize("k0", [7, 16, 21])
+def test_wavefront_laplacian_matches_serial(k0):
+    space = make_space((2, 30), 0.9, stop_threshold=0.05)
+    res = WavefrontScheduler(space).run(laplacian(k0, width=0.5))
+    ser = binary_bleed_worklist(space, laplacian(k0, width=0.5), order="pre")
+    assert res.k_optimal == ser.k_optimal
+    assert res.n_visited <= len(space.ks)
+
+
+def test_wavefront_each_k_at_most_once_and_early_stop():
+    calls = []
+    space = make_space((2, 40), 0.7, stop_threshold=0.2)
+
+    def ev(k):
+        calls.append(k)
+        return square_wave(11)(k)
+
+    res = WavefrontScheduler(space).run(ev)
+    assert res.k_optimal == 11
+    assert len(calls) == len(set(calls))
+
+
+def test_wavefront_max_wave_chunks_and_agrees():
+    space = make_space((2, 30), 0.7)
+    capped = WavefrontScheduler(space, max_wave=2)
+    res = capped.run(square_wave(19))
+    assert res.k_optimal == 19
+    assert all(len(w.ks) <= 2 for w in capped.waves)
+
+
+def test_api_batched_executor_matches_threads():
+    for k0 in (4, 13, 28):
+        rb = binary_bleed_search(square_wave(k0), (2, 30), 0.7, executor="batched")
+        rt = binary_bleed_search(square_wave(k0), (2, 30), 0.7, num_resources=4, executor="threads")
+        assert rb.k_optimal == rt.k_optimal == k0
+
+
+def test_scalar_plane_forwards_abort_only_when_accepted():
+    seen = []
+
+    def with_abort(k, should_abort=None):
+        seen.append(should_abort)
+        return 1.0
+
+    plane = ScalarEvalPlane(with_abort)
+    assert plane.accepts_abort
+    plane.evaluate_one(3, should_abort=lambda: False)
+    assert callable(seen[-1])
+    plain = ScalarEvalPlane(lambda k: 0.5)
+    assert not plain.accepts_abort
+    assert plain.evaluate_batch([1, 2]) == [0.5, 0.5]
+
+
+def test_as_eval_plane_accepts_batch_only_objects():
+    class BatchOnly:
+        def evaluate_batch(self, ks):
+            return [float(k) for k in ks]
+
+    plane = as_eval_plane(BatchOnly())
+    assert plane.evaluate_one(7) == 7.0
+    assert plane.evaluate_batch([1, 2]) == [1.0, 2.0]
+    with pytest.raises(TypeError):
+        as_eval_plane(42)
+
+
+# ---------------------------------------------------------------------------
+# (b) mask-padded batched fits vs their per-k counterparts
+# ---------------------------------------------------------------------------
+def test_kmeans_batched_matches_per_k():
+    x, _ = blob_data(jax.random.fold_in(KEY, 1), n=120, d=5, k_true=4)
+    ks = [2, 3, 4, 6, 7]
+    batch = kmeans_batched(x, ks, KEY, k_pad=8, max_iters=50)
+    for i, k in enumerate(ks):
+        ref = kmeans(x, k, jax.random.fold_in(KEY, k), max_iters=50)
+        assert bool(jnp.all(batch.labels[i] == ref.labels))
+        np.testing.assert_allclose(
+            np.asarray(batch.centroids[i][:k]), np.asarray(ref.centroids), rtol=1e-5, atol=1e-5
+        )
+        # padded centroid slots stay zero
+        assert float(jnp.max(jnp.abs(batch.centroids[i][k:]))) == 0.0
+        np.testing.assert_allclose(float(batch.inertia[i]), float(ref.inertia), rtol=1e-5)
+
+
+def test_nmf_batched_matches_per_k():
+    v, _, _ = nmf_data(jax.random.fold_in(KEY, 2), n=48, m=56, k_true=4)
+    ks = [2, 3, 5, 6]
+    k_pad = 8
+    batch = nmf_batched(v, ks, KEY, k_pad=k_pad, iters=80)
+    for i, k in enumerate(ks):
+        sub = jax.random.fold_in(KEY, k)
+        w0, h0 = nmf_init(sub, v.shape[0], v.shape[1], k, jnp.mean(v), v.dtype, k_pad=k_pad)
+        ref = nmf(v, k, sub, iters=80, w0=w0, h0=h0)
+        np.testing.assert_allclose(
+            np.asarray(batch.w[i][:, :k]), np.asarray(ref.w), rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(batch.h[i][:k, :]), np.asarray(ref.h), rtol=1e-4, atol=1e-5
+        )
+        # masked components stay exactly zero
+        assert float(jnp.max(jnp.abs(batch.w[i][:, k:]))) == 0.0
+        np.testing.assert_allclose(float(batch.rel_error[i]), float(ref.rel_error), rtol=1e-5)
+
+
+def test_nmfk_batched_matches_scalar_at_k_pad():
+    """The docstring contract: at k == k_pad the scalar and batched NMFk
+    scores coincide (same perturbation and init draws)."""
+    from repro.factorization.nmfk import nmfk_score, nmfk_score_batched
+
+    v, _, _ = nmf_data(jax.random.fold_in(KEY, 11), n=32, m=36, k_true=3)
+    k = 4
+    batch = nmfk_score_batched(v, [k], KEY, k_pad=k, n_perturbs=3, nmf_iters=40)
+    ref = nmfk_score(v, k, jax.random.fold_in(KEY, k), n_perturbs=3, nmf_iters=40)
+    np.testing.assert_allclose(float(batch.min_silhouette[0]), float(ref.min_silhouette), atol=1e-5)
+    np.testing.assert_allclose(float(batch.mean_silhouette[0]), float(ref.mean_silhouette), atol=1e-5)
+    np.testing.assert_allclose(float(batch.rel_error[0]), float(ref.rel_error), rtol=1e-5)
+
+
+def test_plane_dispatch_cap_bounds_batch_padding():
+    """WavefrontScheduler(max_wave=N) must keep plane batches within N."""
+    from repro.factorization.planes import _BatchPlaneBase
+
+    class Plane(_BatchPlaneBase):
+        def __init__(self):
+            super().__init__(k_pad=16, pad_batch=True)
+
+        def evaluate_batch(self, ks):
+            padded, _, n_real = self._pad_ks(ks)
+            return [1.0 if k <= 9 else 0.0 for k in padded[:n_real]]
+
+    plane = Plane()
+    sched = WavefrontScheduler(make_space((2, 16), 0.7), max_wave=3)
+    res = sched.run(plane)
+    assert res.k_optimal == 9
+    assert plane.dispatch_cap == 3
+    assert all(b <= 3 for b, _ in plane.shapes_compiled)
+
+
+def test_batched_fit_rejects_bad_k_pad():
+    x, _ = blob_data(KEY, n=40, d=3, k_true=3)
+    with pytest.raises(ValueError):
+        kmeans_batched(x, [2, 6], KEY, k_pad=4)
+    v, _, _ = nmf_data(KEY, n=24, m=28, k_true=3)
+    with pytest.raises(ValueError):
+        nmf_batched(v, [9], KEY, k_pad=4)
+
+
+# ---------------------------------------------------------------------------
+# masked scoring ignores padded clusters / points
+# ---------------------------------------------------------------------------
+def test_masked_scores_reduce_to_unmasked():
+    pts = jax.random.normal(jax.random.fold_in(KEY, 3), (60, 4))
+    lab = jax.random.randint(jax.random.fold_in(KEY, 4), (60,), 0, 5)
+    s_ref = float(silhouette_score(pts, lab, 5))
+    assert abs(float(silhouette_score_masked(pts, lab, 5)) - s_ref) < 1e-6
+    # extra (empty) padded cluster slots change nothing
+    assert abs(float(silhouette_score_masked(pts, lab, 9)) - s_ref) < 1e-6
+    d_ref = float(davies_bouldin_score(pts, lab, 5))
+    got = float(davies_bouldin_score_masked(pts, lab, 9, cluster_mask=jnp.arange(9) < 5))
+    assert abs(got - d_ref) < 1e-5
+
+
+def test_masked_silhouette_ignores_padding_points():
+    pts = jax.random.normal(jax.random.fold_in(KEY, 5), (50, 4))
+    lab = jax.random.randint(jax.random.fold_in(KEY, 6), (50,), 0, 4)
+    s_ref = float(silhouette_score(pts, lab, 4))
+    pts_p = jnp.concatenate([pts, jnp.zeros((14, 4))])
+    lab_p = jnp.concatenate([lab, jnp.zeros((14,), lab.dtype)])
+    got = float(silhouette_score_masked(pts_p, lab_p, 4, point_mask=jnp.arange(64) < 50))
+    assert abs(got - s_ref) < 1e-5
+
+
+def test_masked_scores_support_leading_batch_axis():
+    pts = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 40, 3))
+    lab = jax.random.randint(jax.random.fold_in(KEY, 8), (2, 40), 0, 4)
+    s = silhouette_score_masked(pts, lab, 4)
+    assert s.shape == (2,)
+    for i in range(2):
+        assert abs(float(s[i]) - float(silhouette_score(pts[i], lab[i], 4))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# batched pairwise kernel entry point
+# ---------------------------------------------------------------------------
+def test_batched_pairwise_kernel_matches_oracle():
+    from repro.core.scoring import pairwise_sq_dists
+    from repro.kernels import ops
+
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (3, 40, 7))
+    y = jax.random.normal(jax.random.fold_in(KEY, 10), (3, 24, 7))
+    got = ops.pairwise_sq_dists_batched(x, y)
+    want = jax.vmap(lambda a, b: pairwise_sq_dists(a, b))(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+    # scoring-layer 3-D dispatch routes through the same kernel
+    got2 = pairwise_sq_dists(x, y, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want), rtol=3e-5, atol=3e-5)
