@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json out.json]
 
 Prints ``name,value,derived`` CSV rows:
   bench_visits      — Fig 7/8: % of K visited (NMFk + K-Means, 4 variants)
@@ -8,11 +8,18 @@ Prints ``name,value,derived`` CSV rows:
   bench_distributed — Fig 9: distributed NMF/RESCAL visit % + modeled runtime
   bench_chunking    — Table II: T1-T4 strategy ablation
   bench_kernels     — Pallas kernel parity + tile economics
+  bench_scoring     — streaming vs dense silhouette: bytes moved + wall-clock
   bench_roofline    — §Roofline terms from the dry-run artifacts
+
+``--json out.json`` additionally writes the structured results as
+``{bench: {metric: value}}`` — the machine-readable form CI archives per
+run so BENCH_*.json artifacts accumulate a perf trajectory over time.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 import time
 import traceback
@@ -22,6 +29,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="full-scale (slow) settings")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write structured {bench: {metric: value}} results to OUT")
     args = ap.parse_args()
     quick = not args.full
 
@@ -31,6 +40,7 @@ def main() -> None:
         bench_kernels,
         bench_kmeans_rmse,
         bench_roofline,
+        bench_scoring,
         bench_visits,
     )
 
@@ -40,6 +50,7 @@ def main() -> None:
         "kmeans_rmse": bench_kmeans_rmse.run,
         "distributed": bench_distributed.run,
         "visits": bench_visits.run,
+        "scoring": bench_scoring.run,
         "roofline": bench_roofline.run,
     }
     if args.only:
@@ -48,16 +59,24 @@ def main() -> None:
 
     print("name,value,derived")
     failures = 0
+    results: dict[str, dict[str, float]] = {}
     for name, fn in benches.items():
         t0 = time.time()
+        results[name] = {}
         try:
             for row_name, value, derived in fn(quick=quick):
                 print(f"{row_name},{value:.4f},{derived}")
+                if math.isfinite(value):  # keep the JSON strict (no Infinity)
+                    results[name][row_name] = float(value)
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{name},nan,ERROR {type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

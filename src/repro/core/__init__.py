@@ -22,6 +22,7 @@ from .chunking import chunk_block, chunk_skip_mod, plan_worklists, rebalance  # 
 from .coordinator import Bounds, FileCoordinator, InProcessCoordinator  # noqa: F401
 from .scheduler import ResourceEvent  # noqa: F401
 from .scoring import (  # noqa: F401
+    cluster_dist_sums,
     davies_bouldin_score,
     davies_bouldin_score_masked,
     laplacian_score,

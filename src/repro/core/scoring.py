@@ -4,10 +4,26 @@ The paper pairs Binary Bleed with:
   * silhouette score (maximize) — NMFk / RESCALk stability scoring,
   * Davies-Bouldin index (minimize) — K-Means.
 
-Both need all-pairs distances — the Tscorer hot spot. ``pairwise_sq_dists``
-dispatches to the Pallas kernel (`repro.kernels.pairwise_dist`) when
-``use_kernel=True`` and shapes are tile-aligned; the jnp fallback is the
-oracle the kernel is tested against.
+Both reduce all-pairs distances — the Tscorer hot spot. The silhouette only
+ever consumes the (n, n) distance matrix through one contraction,
+``dist_sums = sqrt(D2) @ onehot`` — so ``cluster_dist_sums`` computes the
+(n, k) sums directly and dispatches across three tiers:
+
+  1. **dense jnp** — materialize sqrt(D2) and contract. Fastest for small n
+     (one fused XLA GEMM chain), O(n^2) memory; selected when the per-lane
+     distance block fits ``_DENSE_MAX_ELEMENTS``.
+  2. **blocked jnp** — ``lax.map`` over row blocks: each (block_rows, n)
+     distance strip is built, contracted to (block_rows, k), and freed.
+     Peak footprint O(block_rows * n) instead of O(n^2); serves large n on
+     any backend and every non-tile-aligned shape.
+  3. **Pallas** (``use_kernel=True``) — the fused streaming kernel
+     (`repro.kernels.silhouette_sums`): each (bn, bm) distance tile lives
+     only in VMEM, sqrt applied in-register, accumulated straight into the
+     (bn, k) sums. HBM output traffic O(n*k); D never exists in HBM.
+
+``pairwise_sq_dists`` likewise dispatches to the Pallas distance kernel
+(`repro.kernels.pairwise_dist`) when ``use_kernel=True``; the jnp fallbacks
+are the oracles the kernels are tested against.
 
 §III-D synthetic score models (square wave / Laplacian peak) are included:
 they drive the property tests and the visit-count benchmarks without paying
@@ -52,6 +68,74 @@ def pairwise_sq_dists(x: Array, y: Array | None = None, use_kernel: bool = False
     return jnp.maximum(d2, 0.0)
 
 
+# Dense-tier ceiling: largest per-lane (n, m) distance block the dense path
+# may materialize (fp32 elements; 2048^2 = 16 MiB). Above it, row-blocking.
+_DENSE_MAX_ELEMENTS = 2048 * 2048
+_DEFAULT_BLOCK_ROWS = 512
+
+
+def _cluster_dist_sums_blocked(x: Array, onehot: Array, block_rows: int) -> Array:
+    """Tier 2: row-blocked ``sqrt(pairwise) @ onehot`` via ``lax.map``.
+
+    x (..., n, d), onehot (..., n, k) — each (block_rows, n) distance strip
+    is contracted to (block_rows, k) and discarded, so the peak footprint is
+    O(block_rows * n) regardless of n.
+    """
+    n = x.shape[-2]
+    n_blocks = -(-n // block_rows)
+    pad = n_blocks * block_rows - n
+    widths = [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)]
+    xp = jnp.pad(x, widths)
+
+    def one_block(i):
+        xi = jax.lax.dynamic_slice_in_dim(xp, i * block_rows, block_rows, axis=-2)
+        strip = jnp.sqrt(pairwise_sq_dists(xi, x))  # (..., block_rows, n)
+        return jnp.matmul(strip, onehot)
+
+    res = jax.lax.map(one_block, jnp.arange(n_blocks))  # (n_blocks, ..., block_rows, k)
+    res = jnp.moveaxis(res, 0, -3)  # (..., n_blocks, block_rows, k)
+    res = res.reshape(res.shape[:-3] + (n_blocks * block_rows, onehot.shape[-1]))
+    return res[..., :n, :]
+
+
+def cluster_dist_sums(
+    x: Array,
+    onehot: Array,
+    use_kernel: bool = False,
+    block_rows: int | None = None,
+) -> Array:
+    """(…, n, k) sums of sqrt distances from every point to every cluster.
+
+    ``out[..., i, c] = sum_j sqrt(||x_i - x_j||^2) * onehot[..., j, c]`` —
+    the only form in which the silhouette consumes the distance matrix.
+    Masked points carry zero one-hot rows and contract to nothing.
+
+    Dispatch (see module docstring): ``use_kernel=True`` routes 2-D inputs
+    to the fused streaming Pallas kernel and 3-D inputs to its batched
+    entry; otherwise small problems take the dense jnp tier and anything
+    past ``_DENSE_MAX_ELEMENTS`` per lane the blocked tier. Passing
+    ``block_rows`` forces the blocked tier at that strip height.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        # the kernels take equal-rank operands; the jnp tiers instead keep
+        # an unbatched x unbatched so one distance pass serves all lanes
+        if x.ndim == onehot.ndim - 1:
+            x = jnp.broadcast_to(x, onehot.shape[:-2] + x.shape[-2:])
+        elif onehot.ndim == x.ndim - 1:
+            onehot = jnp.broadcast_to(onehot, x.shape[:-2] + onehot.shape[-2:])
+        if x.ndim == 2:
+            return kernel_ops.silhouette_dist_sums(x, onehot)
+        if x.ndim == 3:
+            return kernel_ops.silhouette_dist_sums_batched(x, onehot)
+        raise ValueError(f"kernel path supports 2-D or 3-D inputs, got {x.ndim}-D")
+    n = x.shape[-2]
+    if block_rows is None and n * n <= _DENSE_MAX_ELEMENTS:
+        return jnp.matmul(jnp.sqrt(pairwise_sq_dists(x)), onehot)
+    return _cluster_dist_sums_blocked(x, onehot, block_rows or _DEFAULT_BLOCK_ROWS)
+
+
 @functools.partial(jax.jit, static_argnames=("num_clusters", "use_kernel"))
 def silhouette_score(x: Array, labels: Array, num_clusters: int, use_kernel: bool = False) -> Array:
     """Mean silhouette coefficient, vectorized over clusters.
@@ -60,11 +144,11 @@ def silhouette_score(x: Array, labels: Array, num_clusters: int, use_kernel: boo
     ``num_clusters`` static for fixed shapes under jit.
     """
     n = x.shape[0]
-    d = jnp.sqrt(pairwise_sq_dists(x, use_kernel=use_kernel))
     onehot = jax.nn.one_hot(labels, num_clusters, dtype=x.dtype)  # (n, k)
     sizes = jnp.sum(onehot, axis=0)  # (k,)
-    # sum of distances from each point to each cluster: (n, k)
-    dist_sums = d @ onehot
+    # sum of distances from each point to each cluster: (n, k) — streamed,
+    # the (n, n) distance matrix is never materialized past the dense tier
+    dist_sums = cluster_dist_sums(x, onehot, use_kernel=use_kernel)
     own_size = sizes[labels]  # (n,)
     # a(i): mean intra-cluster distance excluding self
     a = dist_sums[jnp.arange(n), labels] / jnp.maximum(own_size - 1.0, 1.0)
@@ -120,9 +204,8 @@ def silhouette_samples_masked(
     after masking — in particular the padded slots >= k_eff of a mask-padded
     fit — never appear in b(i) and contribute nothing. Returns s (..., n);
     both the mean score and NMFk's per-cluster min reduce from this one
-    distance-matrix pass.
+    streamed dist-sums pass.
     """
-    d = jnp.sqrt(pairwise_sq_dists(x, use_kernel=use_kernel))  # (..., n, n)
     mask = (
         jnp.ones(x.shape[:-1], bool)
         if point_mask is None
@@ -130,7 +213,9 @@ def silhouette_samples_masked(
     )
     onehot = jax.nn.one_hot(labels, num_clusters, dtype=x.dtype) * mask[..., None]
     sizes = jnp.sum(onehot, axis=-2)  # (..., k) — active members only
-    dist_sums = jnp.matmul(d, onehot)  # (..., n, k)
+    # masked one-hot rows are zero, so the streaming contraction is exact:
+    # padding points contribute nothing without ever masking distances
+    dist_sums = cluster_dist_sums(x, onehot, use_kernel=use_kernel)  # (..., n, k)
     own_size = jnp.take_along_axis(sizes[..., None, :], labels[..., None], axis=-1)[..., 0]
     own_sum = jnp.take_along_axis(dist_sums, labels[..., None], axis=-1)[..., 0]
     a = own_sum / jnp.maximum(own_size - 1.0, 1.0)

@@ -26,7 +26,7 @@ from typing import Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.scoring import silhouette_samples_masked, silhouette_score
+from repro.core.scoring import silhouette_samples_masked
 
 from .batching import batched_lanes
 from .nmf import _nmf_masked, nmf
@@ -77,7 +77,7 @@ def _align_columns(w_all: Array) -> Array:
     return assigns.reshape(p * k)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "n_perturbs", "nmf_iters"))
+@functools.partial(jax.jit, static_argnames=("k", "n_perturbs", "nmf_iters", "use_kernel"))
 def nmfk_score(
     v: Array,
     k: int,
@@ -85,6 +85,7 @@ def nmfk_score(
     n_perturbs: int = 8,
     nmf_iters: int = 150,
     epsilon: float = 0.015,
+    use_kernel: bool = False,
 ) -> NMFkScore:
     """Silhouette-stability score of rank k (higher = stable = good)."""
     kp, kf = jax.random.split(key)
@@ -101,24 +102,12 @@ def nmfk_score(
     w_all = w_all / jnp.maximum(jnp.linalg.norm(w_all, axis=1, keepdims=True), 1e-12)
     labels = _align_columns(w_all)  # (p*k,)
     cols = jnp.transpose(w_all, (0, 2, 1)).reshape(-1, v.shape[0])  # (p*k, n)
-    sil_mean = silhouette_score(cols, labels, num_clusters=k)
-    # per-cluster min silhouette
-    d = jnp.sqrt(
-        jnp.maximum(
-            jnp.sum(cols**2, 1)[:, None] + jnp.sum(cols**2, 1)[None, :] - 2 * cols @ cols.T,
-            0.0,
-        )
-    )
+    # one streamed dist-sums pass yields both statistics (the pooled-column
+    # distance matrix is never materialized on the blocked/Pallas tiers)
+    s = silhouette_samples_masked(cols, labels, num_clusters=k, use_kernel=use_kernel)
+    sil_mean = jnp.mean(s)
     onehot = jax.nn.one_hot(labels, k, dtype=cols.dtype)
     sizes = jnp.sum(onehot, axis=0)
-    dist_sums = d @ onehot
-    npts = cols.shape[0]
-    a = dist_sums[jnp.arange(npts), labels] / jnp.maximum(sizes[labels] - 1.0, 1.0)
-    mean_to = dist_sums / jnp.maximum(sizes[None, :], 1.0)
-    mask_own = jax.nn.one_hot(labels, k, dtype=bool)
-    b = jnp.min(jnp.where(mask_own, jnp.inf, mean_to), axis=1)
-    s = (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-12)
-    s = jnp.where(sizes[labels] <= 1.0, 0.0, s)
     per_cluster = (onehot.T @ s) / jnp.maximum(sizes, 1.0)
     # guard: k=1 has a single cluster, silhouette undefined -> 1.0 (stable)
     min_sil = jnp.where(k > 1, jnp.min(per_cluster), 1.0)
@@ -155,7 +144,7 @@ def _align_columns_masked(w_all: Array, k_eff: Array) -> Array:
     return assigns.reshape(p * k_pad)
 
 
-@functools.partial(jax.jit, static_argnames=("k_pad", "n_perturbs", "nmf_iters"))
+@functools.partial(jax.jit, static_argnames=("k_pad", "n_perturbs", "nmf_iters", "use_kernel"))
 def _nmfk_score_masked(
     v: Array,
     k_eff: Array,
@@ -164,6 +153,7 @@ def _nmfk_score_masked(
     n_perturbs: int = 8,
     nmf_iters: int = 150,
     epsilon: float = 0.015,
+    use_kernel: bool = False,
 ) -> NMFkScore:
     """``nmfk_score`` with the rank padded to k_pad and masked to k_eff.
 
@@ -186,9 +176,11 @@ def _nmfk_score_masked(
     labels = _align_columns_masked(w_all, k_eff)  # (p*k_pad,)
     cols = jnp.transpose(w_all, (0, 2, 1)).reshape(-1, v.shape[0])  # (p*k_pad, n)
     point_mask = jnp.tile(active, n_perturbs)  # (p*k_pad,)
-    # one distance-matrix pass yields both statistics: mean over active
+    # one streamed dist-sums pass yields both statistics: mean over active
     # points and NMFk's per-cluster min over active clusters
-    s = silhouette_samples_masked(cols, labels, num_clusters=k_pad, point_mask=point_mask)
+    s = silhouette_samples_masked(
+        cols, labels, num_clusters=k_pad, point_mask=point_mask, use_kernel=use_kernel
+    )
     sil_mean = jnp.sum(s) / jnp.maximum(jnp.sum(point_mask), 1.0)
     onehot = jax.nn.one_hot(labels, k_pad, dtype=cols.dtype) * point_mask[:, None]
     sizes = jnp.sum(onehot, axis=0)
@@ -208,6 +200,7 @@ def nmfk_score_batched(
     n_perturbs: int = 8,
     nmf_iters: int = 150,
     epsilon: float = 0.015,
+    use_kernel: bool = False,
 ) -> NMFkScore:
     """Score every rank in ``ks`` as one padded vmapped NMFk ensemble.
 
@@ -219,7 +212,14 @@ def nmfk_score_batched(
     ks_arr, keys, k_pad = batched_lanes(ks, key, k_pad)
     return jax.vmap(
         lambda k_eff, sub: _nmfk_score_masked(
-            v, k_eff, sub, k_pad, n_perturbs=n_perturbs, nmf_iters=nmf_iters, epsilon=epsilon
+            v,
+            k_eff,
+            sub,
+            k_pad,
+            n_perturbs=n_perturbs,
+            nmf_iters=nmf_iters,
+            epsilon=epsilon,
+            use_kernel=use_kernel,
         )
     )(ks_arr, keys)
 
@@ -231,13 +231,22 @@ def make_nmfk_evaluator(
     nmf_iters: int = 150,
     epsilon: float = 0.015,
     statistic: str = "min",
+    use_kernel: bool = False,
 ) -> Callable[[int], float]:
     """Binary Bleed ``evaluate(k)`` closure over a dataset."""
 
     def evaluate(k: int, should_abort=None) -> float:
         del should_abort  # jit'd fast path has no chunk boundary to poll
         sub = jax.random.fold_in(key, k)
-        sc = nmfk_score(v, int(k), sub, n_perturbs=n_perturbs, nmf_iters=nmf_iters, epsilon=epsilon)
+        sc = nmfk_score(
+            v,
+            int(k),
+            sub,
+            n_perturbs=n_perturbs,
+            nmf_iters=nmf_iters,
+            epsilon=epsilon,
+            use_kernel=use_kernel,
+        )
         return float(sc.min_silhouette if statistic == "min" else sc.mean_silhouette)
 
     return evaluate

@@ -95,6 +95,7 @@ class NMFkBatchPlane(_BatchPlaneBase):
         statistic: str = "min",
         k_pad: int | None = None,
         pad_batch: bool = True,
+        use_kernel: bool = False,
     ):
         super().__init__(k_pad, pad_batch)
         if statistic not in ("min", "mean"):
@@ -105,6 +106,7 @@ class NMFkBatchPlane(_BatchPlaneBase):
         self.nmf_iters = nmf_iters
         self.epsilon = epsilon
         self.statistic = statistic
+        self.use_kernel = use_kernel
 
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         padded, k_pad, n_real = self._pad_ks(ks)
@@ -116,6 +118,7 @@ class NMFkBatchPlane(_BatchPlaneBase):
             n_perturbs=self.n_perturbs,
             nmf_iters=self.nmf_iters,
             epsilon=self.epsilon,
+            use_kernel=self.use_kernel,
         )
         scores = sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette
         return [float(s) for s in scores[:n_real]]
@@ -137,6 +140,7 @@ class KMeansBatchPlane(_BatchPlaneBase):
         max_iters: int = 100,
         k_pad: int | None = None,
         pad_batch: bool = True,
+        use_kernel: bool = False,
     ):
         super().__init__(k_pad, pad_batch)
         if score not in ("davies_bouldin", "silhouette"):
@@ -145,6 +149,7 @@ class KMeansBatchPlane(_BatchPlaneBase):
         self.key = key
         self.score = score
         self.max_iters = max_iters
+        self.use_kernel = use_kernel
 
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
@@ -153,15 +158,17 @@ class KMeansBatchPlane(_BatchPlaneBase):
         res = kmeans_batched(self.x, padded, self.key, k_pad=k_pad, max_iters=self.max_iters)
         ks_arr = jnp.asarray(padded)
         cluster_mask = jnp.arange(k_pad)[None, :] < ks_arr[:, None]  # (b, k_pad)
-        # x stays unbatched (n, d): the masked scorers broadcast it against
-        # the batched labels, so the point-pairwise work is done once, not
-        # once per lane.
+        # x stays unbatched (n, d): the jnp scorer tiers broadcast it against
+        # the batched labels so the point-pairwise work is done once, while
+        # the Pallas tier streams per-lane tiles that never hit HBM.
         if self.score == "davies_bouldin":
             scores = davies_bouldin_score_masked(
                 self.x, res.labels, k_pad, cluster_mask=cluster_mask
             )
         else:
-            scores = silhouette_score_masked(self.x, res.labels, k_pad)
+            scores = silhouette_score_masked(
+                self.x, res.labels, k_pad, use_kernel=self.use_kernel
+            )
         return [float(s) for s in scores[:n_real]]
 
 

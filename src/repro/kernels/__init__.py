@@ -2,9 +2,18 @@
 
   * nmf_update      — fused multiplicative-update GEMM+epilogue (T_model)
   * pairwise_dist   — fused distance-matrix GEMM+norms (T_scorer)
+  * silhouette_sums — streaming fused silhouette dist-sums: (n, k) cluster
+                      sums with the (n, n) distance matrix kept in VMEM
   * flash_attention — causal/windowed GQA online-softmax attention (LM substrate)
 
 ``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
 """
 from . import ops, ref  # noqa: F401
-from .ops import flash_attention, mu_update_h, mu_update_w, pairwise_sq_dists  # noqa: F401
+from .ops import (  # noqa: F401
+    flash_attention,
+    mu_update_h,
+    mu_update_w,
+    pairwise_sq_dists,
+    silhouette_dist_sums,
+    silhouette_dist_sums_batched,
+)

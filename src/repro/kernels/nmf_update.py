@@ -11,7 +11,8 @@ multiplicative update so the (k, m)/(n, k) numerator never round-trips HBM:
 Tiling: the grid reduces over the long axis (n for H-update, m for
 W-update) with a VMEM fp32 accumulator revisited across reduction steps;
 the final reduction step applies the fused divide-multiply and writes the
-updated factor tile. k is padded to the 128-lane MXU width by ops.py;
+updated factor tile. ops.py pads k to the 128-lane MXU width on the TPU
+path (and to 8 under interpret mode, where lane alignment is moot);
 zero-padded rows/columns are preserved as zeros by the update algebra.
 
 Block shapes default to (128, 128)-aligned tiles: with k<=256 the working

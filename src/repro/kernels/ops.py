@@ -15,10 +15,18 @@ import jax.numpy as jnp
 from . import flash_attention as _fa
 from . import nmf_update as _nmf
 from . import pairwise_dist as _pd
+from . import silhouette_sums as _ss
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _lane_mult(interpret: bool) -> int:
+    """Rank/lane padding multiple: the 128-lane MXU width on the real TPU
+    path, 8 under interpret mode where lane alignment buys nothing and
+    128-padding tiny-k problems would only waste interpreter time."""
+    return 8 if interpret else 128
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -35,30 +43,33 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 # NMF multiplicative updates
 # -----------------------------------------------------------------------------
 def mu_update_h(v: jax.Array, w: jax.Array, h: jax.Array, interpret: bool | None = None) -> jax.Array:
-    """Fused H <- H * (W^T V)/(W^T W H + eps); pads (n, m, k) to tiles."""
+    """Fused H <- H * (W^T V)/(W^T W H + eps); pads (n, m) to tiles and k to
+    the lane width (128 on TPU, 8 under interpret — see ``_lane_mult``)."""
     interpret = _interpret_default() if interpret is None else interpret
     n, m = v.shape
     k = w.shape[1]
     bn = 128 if n % 128 == 0 else 8
     bm = 128 if m % 128 == 0 else 8
+    bk = _lane_mult(interpret)
     vp = _pad_to(_pad_to(v, 0, bn), 1, bm)
-    wp = _pad_to(_pad_to(w, 0, bn), 1, 8)
-    hp = _pad_to(_pad_to(h, 0, 8), 1, bm)
+    wp = _pad_to(_pad_to(w, 0, bn), 1, bk)
+    hp = _pad_to(_pad_to(h, 0, bk), 1, bm)
     g = wp.T @ wp  # (kp, kp) — cheap, fp32
     out = _nmf.h_update(vp, wp, hp, g, bm=bm, bn=bn, interpret=interpret)
     return out[:k, :m].astype(h.dtype)
 
 
 def mu_update_w(v: jax.Array, w: jax.Array, h: jax.Array, interpret: bool | None = None) -> jax.Array:
-    """Fused W <- W * (V H^T)/(W H H^T + eps)."""
+    """Fused W <- W * (V H^T)/(W H H^T + eps); k padded like ``mu_update_h``."""
     interpret = _interpret_default() if interpret is None else interpret
     n, m = v.shape
     k = w.shape[1]
     bn = 128 if n % 128 == 0 else 8
     bm = 128 if m % 128 == 0 else 8
+    bk = _lane_mult(interpret)
     vp = _pad_to(_pad_to(v, 0, bn), 1, bm)
-    wp = _pad_to(_pad_to(w, 0, bn), 1, 8)
-    hp = _pad_to(_pad_to(h, 0, 8), 1, bm)
+    wp = _pad_to(_pad_to(w, 0, bn), 1, bk)
+    hp = _pad_to(_pad_to(h, 0, bk), 1, bm)
     q = hp @ hp.T
     out = _nmf.w_update(vp, hp, wp, q, bm=bm, bn=bn, interpret=interpret)
     return out[:n, :k].astype(w.dtype)
@@ -101,6 +112,62 @@ def pairwise_sq_dists_batched(
     yp = _pad_to(_pad_to(y, 1, bm), 2, bd)
     out = _pd.pairwise_sq_dists_batched(xp, yp, bn=bn, bm=bm, bd=bd, interpret=interpret)
     return out[:, :n, :m]
+
+
+# -----------------------------------------------------------------------------
+# Streaming silhouette dist-sums (fused distance + cluster reduction)
+# -----------------------------------------------------------------------------
+def silhouette_dist_sums(
+    x: jax.Array,
+    onehot: jax.Array,
+    y: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(n, k) cluster distance sums ``sqrt(pairwise(x, y)) @ onehot`` without
+    materializing the (n, m) distance matrix.
+
+    x (n, d), y (m, d) (default x), onehot (m, k) with zero rows for
+    masked/padded points. Zero-padding m is exact because padded one-hot
+    rows are zero (their distances contract to nothing); zero-padding d is
+    exact for distances; padded n rows and k columns are sliced off.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    y = x if y is None else y
+    n, d = x.shape
+    m, k = onehot.shape
+    bn = 128 if n % 128 == 0 else 8
+    bm = 128 if m % 128 == 0 else 8
+    bd = 128 if d % 128 == 0 else 8
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    yp = _pad_to(_pad_to(y, 0, bm), 1, bd)
+    gp = _pad_to(_pad_to(onehot, 0, bm), 1, _lane_mult(interpret))
+    out = _ss.silhouette_dist_sums(xp, yp, gp, bn=bn, bm=bm, bd=bd, interpret=interpret)
+    return out[:n, :k]
+
+
+def silhouette_dist_sums_batched(
+    x: jax.Array,
+    onehot: jax.Array,
+    y: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Leading-axis batched streaming dist-sums: x (b, n, d), onehot (b, m, k).
+
+    One launch streams all b wavefront lanes; the (b, n, m) distance block
+    the dense batched path would write to HBM never exists.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    y = x if y is None else y
+    _, n, d = x.shape
+    _, m, k = onehot.shape
+    bn = 128 if n % 128 == 0 else 8
+    bm = 128 if m % 128 == 0 else 8
+    bd = 128 if d % 128 == 0 else 8
+    xp = _pad_to(_pad_to(x, 1, bn), 2, bd)
+    yp = _pad_to(_pad_to(y, 1, bm), 2, bd)
+    gp = _pad_to(_pad_to(onehot, 1, bm), 2, _lane_mult(interpret))
+    out = _ss.silhouette_dist_sums_batched(xp, yp, gp, bn=bn, bm=bm, bd=bd, interpret=interpret)
+    return out[:, :n, :k]
 
 
 # -----------------------------------------------------------------------------

@@ -30,6 +30,29 @@ def pairwise_sq_dists_ref(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.maximum(d2, 0.0)
 
 
+def silhouette_dist_sums_ref(x: jax.Array, onehot: jax.Array, y: jax.Array | None = None) -> jax.Array:
+    """Dense oracle: materialize sqrt distances, contract with the one-hot.
+
+    Axis-agnostic over leading batch dims — covers both the 2-D and the
+    batched kernel entry points.
+    """
+    y = x if y is None else y
+    d = jnp.sqrt(pairwise_sq_dists_nd_ref(x, y))
+    return jnp.matmul(d, onehot.astype(jnp.float32))
+
+
+def pairwise_sq_dists_nd_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``pairwise_sq_dists_ref`` over optional leading batch dims."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (
+        jnp.sum(x * x, axis=-1)[..., :, None]
+        + jnp.sum(y * y, axis=-1)[..., None, :]
+        - 2.0 * jnp.matmul(x, jnp.swapaxes(y, -1, -2))
+    )
+    return jnp.maximum(d2, 0.0)
+
+
 def attention_ref(
     q: jax.Array,  # (B, Hq, Lq, D)
     k: jax.Array,  # (B, Hk, Lk, D)

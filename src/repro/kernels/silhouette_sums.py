@@ -1,0 +1,190 @@
+"""Fused streaming silhouette dist-sum Pallas kernel (TPU target).
+
+T_scorer's silhouette reduction only ever consumes the (n, n) distance
+matrix D through one contraction: ``dist_sums = sqrt(D2) @ onehot`` with
+``onehot`` the (n, k) cluster membership matrix. The dense path writes D to
+HBM (O(n^2) bytes, (b, n, n) for a batched wavefront) and immediately reads
+it back to reduce it to (n, k) — pure memory traffic with no reuse.
+
+This kernel never lets D leave VMEM: a two-level reduction grid
+(n-tiles x m-reduction x d-reduction) builds each (bn, bm) squared-distance
+tile in a VMEM accumulator over d-steps, applies ``sqrt`` in-register, and
+contracts the tile against the resident (bm, k) one-hot block straight into
+a (bn, k) output accumulator. HBM output traffic drops from O(n^2) to
+O(n*k); input traffic is the x/y tiles plus the one-hot walk.
+
+Masking comes for free: padded/masked points carry all-zero one-hot rows,
+so their (nonzero!) distances contract to zero — the same contract as the
+dense ``sqrt(pairwise) @ onehot`` with a masked one-hot. Rows of y beyond
+the real m may therefore be zero-padded as long as the one-hot is padded
+with zero rows to match (ops.py does both).
+
+Alignment (bn/bm/bd tile multiples, k padded to the lane width) is handled
+by the ops.py wrappers; a leading-axis batched variant serves wavefront
+lanes exactly like ``pairwise_dist.pairwise_sq_dists_batched``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sil_sums_kernel(x_ref, y_ref, g_ref, out_ref, dacc_ref, oacc_ref, *, m_steps: int, d_steps: int):
+    """Grid = (n_tiles, m_steps, d_steps), reductions innermost.
+
+    dacc (bn, bm): squared-distance tile accumulated over d-steps.
+    oacc (bn, k):  sqrt(dacc) @ onehot_blk accumulated over m-steps.
+    """
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when((j == 0) & (s == 0))
+    def _init_out():
+        oacc_ref[...] = jnp.zeros_like(oacc_ref)
+
+    @pl.when(s == 0)
+    def _init_tile():
+        dacc_ref[...] = jnp.zeros_like(dacc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bn, bd)
+    y = y_ref[...].astype(jnp.float32)  # (bm, bd)
+    dacc_ref[...] += (
+        jax.lax.dot_general(
+            x, y, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * -2.0
+        + jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+    )
+
+    @pl.when(s == d_steps - 1)
+    def _contract():
+        # sqrt in-register: the distance tile dies here, never touching HBM
+        dist = jnp.sqrt(jnp.maximum(dacc_ref[...], 0.0))  # (bn, bm)
+        oacc_ref[...] += jax.lax.dot_general(
+            dist,
+            g_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when((j == m_steps - 1) & (s == d_steps - 1))
+    def _finalize():
+        out_ref[...] = oacc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bd", "interpret"))
+def silhouette_dist_sums(
+    x: jax.Array,  # (n, d)
+    y: jax.Array,  # (m, d)
+    onehot: jax.Array,  # (m, k) — zero rows for masked/padded points
+    bn: int = 128,
+    bm: int = 128,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[i, c] = sum_j sqrt(||x_i - y_j||^2) * onehot[j, c], D kept in VMEM."""
+    n, d = x.shape
+    m, k = onehot.shape
+    assert y.shape == (m, d), (y.shape, m, d)
+    assert n % bn == 0 and m % bm == 0 and d % bd == 0, (n, m, d)
+    m_steps = m // bm
+    d_steps = d // bd
+    grid = (n // bn, m_steps, d_steps)
+    return pl.pallas_call(
+        functools.partial(_sil_sums_kernel, m_steps=m_steps, d_steps=d_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bm, bd), lambda i, j, s: (j, s)),
+            pl.BlockSpec((bm, k), lambda i, j, s: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i, j, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        scratch_shapes=[_vmem((bn, bm)), _vmem((bn, k))],
+        interpret=interpret,
+    )(x, y, onehot)
+
+
+def _sil_sums_batched_kernel(
+    x_ref, y_ref, g_ref, out_ref, dacc_ref, oacc_ref, *, m_steps: int, d_steps: int
+):
+    """Grid = (batch, n_tiles, m_steps, d_steps) — the 2-D walk with a
+    leading batch-lane dimension, so one launch streams every lane of a
+    padded wavefront (e.g. the per-k label sets of a batched K-Means wave)."""
+    j = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when((j == 0) & (s == 0))
+    def _init_out():
+        oacc_ref[...] = jnp.zeros_like(oacc_ref)
+
+    @pl.when(s == 0)
+    def _init_tile():
+        dacc_ref[...] = jnp.zeros_like(dacc_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (bn, bd)
+    y = y_ref[0].astype(jnp.float32)  # (bm, bd)
+    dacc_ref[...] += (
+        jax.lax.dot_general(
+            x, y, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * -2.0
+        + jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+    )
+
+    @pl.when(s == d_steps - 1)
+    def _contract():
+        dist = jnp.sqrt(jnp.maximum(dacc_ref[...], 0.0))
+        oacc_ref[...] += jax.lax.dot_general(
+            dist,
+            g_ref[0].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when((j == m_steps - 1) & (s == d_steps - 1))
+    def _finalize():
+        out_ref[0] = oacc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bd", "interpret"))
+def silhouette_dist_sums_batched(
+    x: jax.Array,  # (b, n, d)
+    y: jax.Array,  # (b, m, d)
+    onehot: jax.Array,  # (b, m, k)
+    bn: int = 128,
+    bm: int = 128,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n, d = x.shape
+    _, m, k = onehot.shape
+    assert y.shape == (b, m, d) and onehot.shape[0] == b, (x.shape, y.shape, onehot.shape)
+    assert n % bn == 0 and m % bm == 0 and d % bd == 0, (b, n, m, d)
+    m_steps = m // bm
+    d_steps = d // bd
+    grid = (b, n // bn, m_steps, d_steps)
+    return pl.pallas_call(
+        functools.partial(_sil_sums_batched_kernel, m_steps=m_steps, d_steps=d_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), lambda l, i, j, s: (l, i, s)),
+            pl.BlockSpec((1, bm, bd), lambda l, i, j, s: (l, j, s)),
+            pl.BlockSpec((1, bm, k), lambda l, i, j, s: (l, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, k), lambda l, i, j, s: (l, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, k), jnp.float32),
+        scratch_shapes=[_vmem((bn, bm)), _vmem((bn, k))],
+        interpret=interpret,
+    )(x, y, onehot)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

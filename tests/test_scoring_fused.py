@@ -1,0 +1,203 @@
+"""Fused streaming silhouette scorer vs the dense jnp oracle.
+
+Parity across all three dispatch tiers of ``cluster_dist_sums`` (dense jnp /
+blocked jnp / Pallas), 2-D and batched, masked and unmasked, singleton and
+empty clusters, non-tile-aligned n/d — plus a hypothesis property test that
+the streaming and dense silhouette agree within fp32 tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import scoring
+from repro.core.scoring import (
+    cluster_dist_sums,
+    silhouette_samples_masked,
+    silhouette_score,
+    silhouette_score_masked,
+)
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _problem(seed: int, shape: tuple, k: int):
+    kx, kl = jax.random.split(jax.random.fold_in(KEY, seed))
+    x = jax.random.normal(kx, shape)
+    labels = jax.random.randint(kl, shape[:-1], 0, k)
+    return x, labels
+
+
+# -----------------------------------------------------------------------------
+# Pallas kernel vs dense oracle
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "n,m,d,k",
+    [
+        (32, 32, 5, 3),      # tiny, nothing aligned
+        (70, 70, 17, 6),     # non-tile-aligned n and d
+        (128, 128, 128, 4),  # fully 128-aligned tiles
+        (40, 24, 9, 5),      # rectangular (x vs separate y rows)
+        (8, 8, 200, 2),      # d-reduction dominates
+    ],
+)
+def test_kernel_matches_oracle_2d(n, m, d, k):
+    x, _ = _problem(n * m + d, (n, d), k)
+    y, labels = _problem(n * m + d + 1, (m, d), k)
+    onehot = jax.nn.one_hot(labels, k)
+    got = ops.silhouette_dist_sums(x, onehot, y)
+    want = ref.silhouette_dist_sums_ref(x, onehot, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("b,n,d,k", [(3, 32, 5, 3), (2, 70, 17, 6), (4, 24, 9, 2)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_kernel_matches_oracle_batched(b, n, d, k, masked):
+    x, labels = _problem(b * n + d, (b, n, d), k)
+    onehot = jax.nn.one_hot(labels, k)
+    if masked:  # zero one-hot rows = masked points; must contract to nothing
+        onehot = onehot.at[:, -5:, :].set(0.0)
+    got = ops.silhouette_dist_sums_batched(x, onehot)
+    want = ref.silhouette_dist_sums_ref(x, onehot)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# -----------------------------------------------------------------------------
+# Blocked jnp tier vs dense tier
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block_rows", [(60, 16), (64, 16), (37, 8), (50, 64)])
+def test_blocked_tier_matches_dense(n, block_rows):
+    x, labels = _problem(n + block_rows, (n, 6), 4)
+    onehot = jax.nn.one_hot(labels, 4)
+    want = cluster_dist_sums(x, onehot)
+    got = cluster_dist_sums(x, onehot, block_rows=block_rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_blocked_tier_batched_and_broadcast():
+    """Batched one-hot against both batched and shared (unbatched) x."""
+    b, n, d, k = 3, 45, 5, 4
+    x, labels = _problem(b * n, (b, n, d), k)
+    onehot = jax.nn.one_hot(labels, k)
+    np.testing.assert_allclose(
+        np.asarray(cluster_dist_sums(x, onehot, block_rows=16)),
+        np.asarray(cluster_dist_sums(x, onehot)),
+        **TOL,
+    )
+    x2 = x[0]  # shared points, per-lane labels — the KMeansBatchPlane shape
+    want = jnp.matmul(jnp.sqrt(scoring.pairwise_sq_dists(x2)), onehot)
+    np.testing.assert_allclose(
+        np.asarray(cluster_dist_sums(x2, onehot, block_rows=16)), np.asarray(want), **TOL
+    )
+    np.testing.assert_allclose(
+        np.asarray(cluster_dist_sums(x2, onehot, use_kernel=True)), np.asarray(want), **TOL
+    )
+
+
+def test_auto_dispatch_picks_blocked_past_dense_ceiling(monkeypatch):
+    """Above _DENSE_MAX_ELEMENTS the auto tier must row-block, same result."""
+    x, labels = _problem(99, (48, 5), 3)
+    onehot = jax.nn.one_hot(labels, 3)
+    want = cluster_dist_sums(x, onehot)
+    monkeypatch.setattr(scoring, "_DENSE_MAX_ELEMENTS", 0)
+    got = cluster_dist_sums(x, onehot)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# -----------------------------------------------------------------------------
+# Full silhouette through the fused path
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,k", [(30, 4, 3), (60, 6, 5), (70, 17, 4)])
+def test_silhouette_kernel_matches_dense(n, d, k):
+    x, labels = _problem(n * d, (n, d), k)
+    got = float(silhouette_score(x, labels, k, use_kernel=True))
+    want = float(silhouette_score(x, labels, k))
+    assert abs(got - want) <= 1e-4 * max(1.0, abs(want))
+
+
+def test_silhouette_kernel_singleton_and_empty_clusters():
+    """Cluster k-1 empty, cluster 0 a singleton — conventions must survive
+    the streaming contraction (s=0 for singletons, empties out of b(i))."""
+    n, d, k = 40, 5, 5
+    x, _ = _problem(7, (n, d), k)
+    labels = jnp.concatenate([jnp.zeros(1, jnp.int32), 1 + (jnp.arange(n - 1) % (k - 2))])
+    assert int(jnp.sum(labels == 0)) == 1 and int(jnp.sum(labels == k - 1)) == 0
+    want = silhouette_samples_masked(x, labels, k)
+    got = silhouette_samples_masked(x, labels, k, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+    assert float(got[0]) == 0.0  # singleton convention
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_silhouette_masked_batched_shared_x(use_kernel):
+    """The KMeansBatchPlane call shape: x (n, d), labels (b, n), point_mask
+    (b, n) — per-lane masked scores must match per-lane dense scoring."""
+    b, n, d, k = 3, 36, 4, 4
+    x, _ = _problem(11, (n, d), k)
+    _, labels = _problem(13, (b, n, d), k)
+    n_act = jnp.asarray([n, n - 6, n - 11])
+    point_mask = jnp.arange(n)[None, :] < n_act[:, None]
+    got = silhouette_score_masked(x, labels, k, point_mask=point_mask, use_kernel=use_kernel)
+    for lane in range(b):
+        na = int(n_act[lane])
+        want = float(silhouette_score(x[:na], labels[lane, :na], k))
+        assert abs(float(got[lane]) - want) <= 2e-4, (lane, float(got[lane]), want)
+
+
+def test_nmfk_pooled_scoring_kernel_parity():
+    """use_kernel reaches the pooled-column scorer (incl. under vmap)."""
+    from repro.factorization import nmf_data
+    from repro.factorization.nmfk import nmfk_score, nmfk_score_batched
+
+    v, _, _ = nmf_data(KEY, n=48, m=40, k_true=3)
+    a = nmfk_score(v, 3, KEY, n_perturbs=3, nmf_iters=25)
+    b = nmfk_score(v, 3, KEY, n_perturbs=3, nmf_iters=25, use_kernel=True)
+    np.testing.assert_allclose(float(a.min_silhouette), float(b.min_silhouette), rtol=1e-3, atol=1e-4)
+    sa = nmfk_score_batched(v, [2, 3], KEY, k_pad=4, n_perturbs=3, nmf_iters=25)
+    sb = nmfk_score_batched(v, [2, 3], KEY, k_pad=4, n_perturbs=3, nmf_iters=25, use_kernel=True)
+    np.testing.assert_allclose(
+        np.asarray(sa.min_silhouette), np.asarray(sb.min_silhouette), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_kmeans_plane_kernel_parity():
+    from repro.factorization.planes import KMeansBatchPlane
+
+    x, _ = _problem(17, (40, 5), 4)
+    ref_scores = KMeansBatchPlane(x, KEY, score="silhouette", k_pad=5).evaluate_batch([2, 4])
+    ker_scores = KMeansBatchPlane(
+        x, KEY, score="silhouette", k_pad=5, use_kernel=True
+    ).evaluate_batch([2, 4])
+    np.testing.assert_allclose(ref_scores, ker_scores, rtol=1e-4, atol=1e-4)
+
+
+# -----------------------------------------------------------------------------
+# Property test: streaming silhouette == dense silhouette (fp32 tolerance)
+# -----------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=90),
+    d=st.integers(min_value=1, max_value=20),
+    k=st.integers(min_value=2, max_value=7),
+    tier=st.sampled_from(["blocked", "kernel"]),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_streaming_silhouette_matches_dense_property(n, d, k, tier, seed):
+    x, labels = _problem(seed, (n, d), k)
+    want = float(silhouette_score(x, labels, k))
+    if tier == "kernel":
+        got = float(silhouette_score(x, labels, k, use_kernel=True))
+    else:
+        # un-jitted body so the monkeypatched ceiling takes effect (the jit
+        # cache would otherwise replay a dense-tier trace for a seen shape)
+        orig = scoring._DENSE_MAX_ELEMENTS
+        scoring._DENSE_MAX_ELEMENTS = 0
+        try:
+            got = float(silhouette_score.__wrapped__(x, labels, k))
+        finally:
+            scoring._DENSE_MAX_ELEMENTS = orig
+    assert abs(got - want) <= 1e-4 * max(1.0, abs(want)), (n, d, k, tier, got, want)
