@@ -14,15 +14,61 @@ Prints ``name,value,derived`` CSV rows:
 ``--json out.json`` additionally writes the structured results as
 ``{bench: {metric: value}}`` — the machine-readable form CI archives per
 run so BENCH_*.json artifacts accumulate a perf trajectory over time.
+Every artifact carries a ``_meta`` block (git SHA, ISO timestamp, JAX
+backend/devices, package versions, and the run's metrics ``summary()``)
+so artifacts from different PRs are comparable.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import math
+import os
+import platform
+import subprocess
 import sys
 import time
 import traceback
+
+
+def _run_metadata() -> dict:
+    """Provenance stamp for BENCH_*.json: without this, artifacts from
+    different commits/machines are not comparable and the perf trajectory
+    is noise."""
+    meta: dict = {
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    sha = os.environ.get("GITHUB_SHA")
+    if not sha:
+        try:
+            repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                capture_output=True, text=True, cwd=repo_root, timeout=5,
+            ).stdout.strip() or None
+        except Exception:
+            sha = None
+    meta["git_sha"] = sha
+    try:
+        import jax
+        import jaxlib
+        import numpy
+
+        meta["jax_backend"] = jax.default_backend()
+        meta["devices"] = [str(d) for d in jax.devices()]
+        meta["versions"] = {
+            "jax": jax.__version__,
+            "jaxlib": jaxlib.__version__,
+            "numpy": numpy.__version__,
+        }
+    except Exception as e:  # pragma: no cover - jax is a hard dep in practice
+        meta["jax_backend"] = f"unavailable: {type(e).__name__}"
+    return meta
 
 
 def main() -> None:
@@ -34,11 +80,14 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
+    from repro.obs import Metrics, use_metrics
+
     from . import (
         bench_chunking,
         bench_distributed,
         bench_kernels,
         bench_kmeans_rmse,
+        bench_obs_overhead,
         bench_roofline,
         bench_scoring,
         bench_visits,
@@ -52,6 +101,7 @@ def main() -> None:
         "visits": bench_visits.run,
         "scoring": bench_scoring.run,
         "roofline": bench_roofline.run,
+        "obs_overhead": bench_obs_overhead.run,
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -59,21 +109,28 @@ def main() -> None:
 
     print("name,value,derived")
     failures = 0
-    results: dict[str, dict[str, float]] = {}
+    results: dict = {}
+    run_metrics = Metrics()  # one registry per harness run; stamped into _meta
     for name, fn in benches.items():
         t0 = time.time()
         results[name] = {}
         try:
-            for row_name, value, derived in fn(quick=quick):
-                print(f"{row_name},{value:.4f},{derived}")
-                if math.isfinite(value):  # keep the JSON strict (no Infinity)
-                    results[name][row_name] = float(value)
+            with use_metrics(run_metrics):
+                for row_name, value, derived in fn(quick=quick):
+                    print(f"{row_name},{value:.4f},{derived}")
+                    if math.isfinite(value):  # keep the JSON strict (no Infinity)
+                        results[name][row_name] = float(value)
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{name},nan,ERROR {type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     if args.json:
+        meta = _run_metadata()
+        meta["benches_run"] = sorted(benches)
+        meta["quick"] = quick
+        meta["metrics"] = run_metrics.summary()
+        results["_meta"] = meta
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)

@@ -28,6 +28,8 @@ from __future__ import annotations
 import math
 from typing import Callable, Sequence
 
+from repro.obs import get_metrics, get_tracer
+
 from .search_space import Mode, SearchResult, SearchSpace, VisitRecord
 from .traversal import Order, traversal_sort
 
@@ -41,17 +43,28 @@ EvalFn = Callable[[int], float]
 
 
 class BleedState:
-    """Mutable prune state shared by all Binary Bleed drivers."""
+    """Mutable prune state shared by all Binary Bleed drivers.
 
-    __slots__ = ("space", "lo_bound", "hi_bound", "k_optimal", "visits", "_order_ctr")
+    Instrumented: records/skips/bound-merges flow to the process tracer and
+    metrics registry (``repro.obs``) resolved at construction — a no-op
+    ``NullTracer`` unless telemetry was installed (``ksearch --trace``).
+    """
 
-    def __init__(self, space: SearchSpace):
+    __slots__ = (
+        "space", "lo_bound", "hi_bound", "k_optimal", "visits", "_order_ctr",
+        "_tracer", "_metrics",
+    )
+
+    def __init__(self, space: SearchSpace, tracer=None, metrics=None):
         self.space = space
         self.lo_bound = -math.inf  # ks <= lo_bound are pruned (select crossings)
         self.hi_bound = math.inf  # ks >= hi_bound are pruned (stop crossings)
         self.k_optimal: int | None = None
         self.visits: list[VisitRecord] = []
         self._order_ctr = 0
+        self._tracer = tracer if tracer is not None else get_tracer()
+        self._metrics = metrics if metrics is not None else get_metrics()
+        self._metrics.set_gauge("ks_candidates", len(space.ks))
 
     # -- queries ---------------------------------------------------------------
     def should_visit(self, k: int) -> bool:
@@ -77,12 +90,38 @@ class BleedState:
             if k < self.hi_bound:
                 self.hi_bound = k
         self.visits.append(rec)
+        self._metrics.inc("ks_visited")
+        self._tracer.event(
+            "record", k=k, score=score, resource=resource,
+            pruned_lower=rec.pruned_lower, pruned_upper=rec.pruned_upper,
+        )
+        if rec.pruned_lower or rec.pruned_upper:
+            self._metrics.set_gauge("lo_bound", self.lo_bound)
+            self._metrics.set_gauge("hi_bound", self.hi_bound)
         return rec
+
+    def skip(self, k: int, reason: str = "pruned") -> None:
+        """Account a k pruned before evaluation (the paper's cost saved)."""
+        self._metrics.inc("ks_skipped")
+        self._tracer.event("skip", k=k, reason=reason)
+
+    def skip_interval(self, k_lo: int, k_hi: int, count: int) -> None:
+        """Account a whole pruned subtree ([k_lo, k_hi], ``count`` ks) at once."""
+        self._metrics.inc("ks_skipped", count)
+        self._tracer.event("subtree_prune", k_lo=k_lo, k_hi=k_hi, count=count)
 
     def merge_bounds(self, lo_bound: float, hi_bound: float, k_optimal: int | None) -> None:
         """Fold prune bounds published by another resource (Alg 3/4 receive)."""
-        self.lo_bound = max(self.lo_bound, lo_bound)
-        self.hi_bound = min(self.hi_bound, hi_bound)
+        lo = max(self.lo_bound, lo_bound)
+        hi = min(self.hi_bound, hi_bound)
+        if lo != self.lo_bound or hi != self.hi_bound:
+            self._metrics.inc("bound_merges")
+            self._tracer.event(
+                "bound_merge", lo_before=self.lo_bound, hi_before=self.hi_bound,
+                lo_after=lo, hi_after=hi,
+            )
+        self.lo_bound = lo
+        self.hi_bound = hi
         if k_optimal is not None and (self.k_optimal is None or k_optimal > self.k_optimal):
             self.k_optimal = k_optimal
 
@@ -116,11 +155,14 @@ def binary_bleed_recursive(
             return
         # subtree prune: whole k interval outside live bounds (Alg 1 l.16/18)
         if not state.interval_alive(ks[lo], ks[hi - 1]):
+            state.skip_interval(ks[lo], ks[hi - 1], hi - lo)
             return
         mid = lo + (hi - lo) // 2
         k_mid = ks[mid]
         if state.should_visit(k_mid):  # Alg 1 line 7
             state.record(k_mid, plane.evaluate_one(k_mid))  # lines 8-15
+        else:
+            state.skip(k_mid)
         halves = ((mid + 1, hi), (lo, mid)) if bleed_up_first else ((lo, mid), (mid + 1, hi))
         for a, b in halves:  # lines 16-19: bleed into both directions
             search(a, b)
@@ -156,6 +198,7 @@ def binary_bleed_worklist(
     plane = as_eval_plane(evaluate)
     for k in worklist:
         if not state.should_visit(k):
+            state.skip(k)
             continue
         state.record(k, plane.evaluate_one(k))
     return state.result()

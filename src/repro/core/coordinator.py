@@ -27,6 +27,8 @@ import threading
 import time
 from typing import Iterable, NamedTuple
 
+from repro.obs import get_metrics, get_tracer
+
 
 class Bounds(NamedTuple):
     lo_bound: float  # ks <= lo_bound pruned (select crossings)
@@ -57,9 +59,19 @@ class InProcessCoordinator:
         self._visits: list[tuple[int, float, int]] = []  # (k, score, resource)
 
     def publish(self, bounds: Bounds) -> Bounds:
-        with self._lock:
+        metrics = get_metrics()
+        t0 = time.perf_counter()
+        self._lock.acquire()
+        t_locked = time.perf_counter()
+        try:
             self._bounds = self._bounds.merge(bounds)
-            return self._bounds
+            merged = self._bounds
+        finally:
+            self._lock.release()
+        metrics.observe("lock_wait_s", t_locked - t0)
+        metrics.observe("publish_latency_s", time.perf_counter() - t0)
+        metrics.inc("publish_count")
+        return merged
 
     def record_visit(self, k: int, score: float, resource: int) -> None:
         with self._lock:
@@ -93,18 +105,36 @@ class FileCoordinator:
     # -- tiny lockfile (NFS-safe enough: O_CREAT|O_EXCL with stale timeout) ----
     def _acquire(self, timeout: float = 10.0, stale: float = 30.0) -> None:
         deadline = time.time() + timeout
+        t_wait0 = time.perf_counter()
         while True:
             try:
                 fd = os.open(self._lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
                 os.write(fd, str(os.getpid()).encode())
                 os.close(fd)
+                get_metrics().observe("lock_wait_s", time.perf_counter() - t_wait0)
                 return
             except FileExistsError:
                 try:
-                    if time.time() - os.path.getmtime(self._lock_path) > stale:
-                        os.unlink(self._lock_path)  # break stale lock (dead holder)
-                        continue
+                    st = os.stat(self._lock_path)
                 except FileNotFoundError:
+                    continue
+                age = time.time() - st.st_mtime
+                if age > stale:
+                    # Break the dead holder's lock — but only if it is still
+                    # the SAME file we just stat'ed. Two waiters can both see
+                    # a stale lock; the first unlinks it and wins the O_EXCL
+                    # retry, and without this re-check the second would
+                    # unlink the winner's FRESH lock and "acquire" too.
+                    try:
+                        st2 = os.stat(self._lock_path)
+                        if (st2.st_ino, st2.st_mtime_ns) == (st.st_ino, st.st_mtime_ns):
+                            os.unlink(self._lock_path)
+                            get_metrics().inc("lock_broken")
+                            get_tracer().event(
+                                "lock_broken", path=self._lock_path, age_s=round(age, 3)
+                            )
+                    except FileNotFoundError:
+                        pass  # another waiter broke it first
                     continue
                 if time.time() > deadline:
                     raise TimeoutError(f"lock {self._lock_path} busy")
@@ -132,13 +162,17 @@ class FileCoordinator:
 
     # -- public API -------------------------------------------------------------
     def publish(self, bounds: Bounds) -> Bounds:
+        metrics = get_metrics()
+        t0 = time.perf_counter()
         self._acquire()
         try:
             merged = self._read_state().merge(bounds)
             self._write_state(merged)
-            return merged
         finally:
             self._release()
+        metrics.observe("publish_latency_s", time.perf_counter() - t0)
+        metrics.inc("publish_count")
+        return merged
 
     def snapshot(self) -> Bounds:
         return self._read_state()

@@ -30,6 +30,8 @@ import dataclasses
 import inspect
 from typing import Callable, Protocol, Sequence, runtime_checkable
 
+from repro.obs import get_metrics, get_tracer
+
 from .search_space import SearchResult, SearchSpace
 
 AbortFn = Callable[[], bool]
@@ -141,6 +143,8 @@ class WavefrontScheduler:
         space: SearchSpace,
         max_wave: int | None = None,
         bleed_up_first: bool = True,
+        tracer=None,
+        metrics=None,
     ):
         if max_wave is not None and max_wave < 1:
             raise ValueError("max_wave must be >= 1")
@@ -148,10 +152,14 @@ class WavefrontScheduler:
         self.max_wave = max_wave
         self.bleed_up_first = bleed_up_first
         self.waves: list[Wave] = []
+        self._tracer = tracer
+        self._metrics = metrics
 
     def run(self, evaluate, state=None) -> SearchResult:
         from .bleed import BleedState  # lazy: bleed sits above this module
 
+        tracer = self._tracer if self._tracer is not None else get_tracer()
+        metrics = self._metrics if self._metrics is not None else get_metrics()
         plane = as_eval_plane(evaluate)
         # tell capacity-aware planes the dispatch bound so their batch
         # padding (a compile-reuse optimization) never exceeds it; assign
@@ -160,33 +168,50 @@ class WavefrontScheduler:
             plane.dispatch_cap = self.max_wave
         space = self.space
         ks = space.ks
-        state = state if state is not None else BleedState(space)
+        state = state if state is not None else BleedState(space, tracer=tracer, metrics=metrics)
         self.waves = []
         wave_idx = 0
         intervals: list[tuple[int, int]] = [(0, len(ks))]  # [lo, hi) index spans
 
         while intervals:
-            live = [
-                (lo, hi)
-                for lo, hi in intervals
-                if lo < hi and state.interval_alive(ks[lo], ks[hi - 1])
-            ]
+            live = []
+            for lo, hi in intervals:
+                if lo >= hi:
+                    continue
+                if state.interval_alive(ks[lo], ks[hi - 1]):
+                    live.append((lo, hi))
+                else:
+                    state.skip_interval(ks[lo], ks[hi - 1], hi - lo)
             mids = [lo + (hi - lo) // 2 for lo, hi in live]
-            pending = [ks[m] for m in mids if state.should_visit(ks[m])]
+            pending = []
+            for m in mids:
+                if state.should_visit(ks[m]):
+                    pending.append(ks[m])
+                else:
+                    state.skip(ks[m])
             pending.sort(reverse=self.bleed_up_first)
             step = self.max_wave if self.max_wave is not None else max(len(pending), 1)
             for start in range(0, len(pending), step):
                 # re-filter: earlier chunks of this wave may have pruned these
-                chunk = [k for k in pending[start : start + step] if state.should_visit(k)]
+                chunk = []
+                for k in pending[start : start + step]:
+                    if state.should_visit(k):
+                        chunk.append(k)
+                    else:
+                        state.skip(k, reason="pruned_by_chunk")
                 if not chunk:
                     continue
-                scores = plane.evaluate_batch(chunk)
+                with tracer.span("wave", track="wavefront", wave=wave_idx, size=len(chunk),
+                                 k_lo=min(chunk), k_hi=max(chunk)):
+                    scores = plane.evaluate_batch(chunk)
                 if len(scores) != len(chunk):
                     raise ValueError(
                         f"evaluate_batch returned {len(scores)} scores for {len(chunk)} ks"
                     )
-                for k, score in zip(chunk, scores):
-                    state.record(k, float(score), resource=wave_idx)
+                metrics.observe("wave_size", len(chunk))
+                with tracer.span("publish", track="wavefront", wave=wave_idx):
+                    for k, score in zip(chunk, scores):
+                        state.record(k, float(score), resource=wave_idx)
                 self.waves.append(
                     Wave(wave_idx, list(chunk), [float(s) for s in scores],
                          state.lo_bound, state.hi_bound)

@@ -27,7 +27,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import threading
+import time
 from typing import Callable, Sequence
+
+from repro.obs import get_metrics, get_tracer
+from repro.obs.trace import Tracer
 
 from .bleed import BleedState
 from .chunking import plan_worklists, rebalance
@@ -77,6 +81,33 @@ class ScheduleTrace:
             for i, v in enumerate(sorted(self.visits, key=lambda v: v.t_end))
         ]
         return SearchResult(self.k_optimal, recs, self.n_candidates)
+
+    def to_tracer(self) -> Tracer:
+        """Replay the simulated schedule into the live trace format.
+
+        Logical sim seconds map to trace microseconds (1 s -> 1e6 us), one
+        track per resource — the same shape a live ``ThreadPoolScheduler``
+        run produces, so simulated and real schedules open side by side in
+        Perfetto / ``chrome://tracing``.
+        """
+        tracer = Tracer()
+        for v in sorted(self.visits + self.aborted, key=lambda v: (v.t_start, v.k)):
+            tracer.add_span(
+                "fit", v.t_start * 1e6, (v.t_end - v.t_start) * 1e6,
+                track=f"resource-{v.resource}", k=v.k, score=v.score, aborted=v.aborted,
+            )
+            if v.aborted:
+                tracer.add_event("abort", v.t_end * 1e6, track=f"resource-{v.resource}", k=v.k)
+        if self.skipped:
+            tracer.add_event(
+                "skipped", self.makespan * 1e6, track="scheduler",
+                count=len(self.skipped), ks=list(self.skipped),
+            )
+        return tracer
+
+    def export_perfetto(self, path: str) -> int:
+        """Write the schedule as Chrome-trace JSON; returns #events."""
+        return self.to_tracer().export_perfetto(path)
 
 
 @dataclasses.dataclass
@@ -296,6 +327,9 @@ class ThreadPoolScheduler:
         plane = as_eval_plane(evaluate)
         space = self.space
         coord = self.coordinator
+        tracer = get_tracer()
+        metrics = get_metrics()
+        metrics.set_gauge("ks_candidates", len(space.ks))
         worklists = plan_worklists(space.ks, self.num_resources, self.order, self.strategy)
         errors: list[BaseException] = []
 
@@ -307,21 +341,46 @@ class ThreadPoolScheduler:
             return should_visit
 
         def worker(rid: int, worklist: list[int]) -> None:
+            track = f"resource-{rid}"
             should_visit = make_should_visit()
+
+            def make_should_abort(k: int):
+                # §III-D poll, instrumented: the first True is the abort
+                # signal actually delivered to an in-flight fit — count it.
+                fired = []
+
+                def should_abort() -> bool:
+                    pruned = not should_visit(k)
+                    if pruned and not fired:
+                        fired.append(True)
+                        metrics.inc("ks_aborted")
+                        tracer.event("abort", track=track, k=k)
+                    return pruned
+
+                return should_abort
+
             try:
-                for k in worklist:
-                    if skip and k in skip:  # journaled on a previous run
-                        continue
-                    if not should_visit(k):
-                        continue
-                    score = plane.evaluate_one(
-                        k, should_abort=lambda kk=k: not should_visit(kk)
-                    )
-                    coord.record_visit(k, float(score), rid)
-                    lo = k if space.selects(score) else -float("inf")
-                    hi = k if space.stops(score) else float("inf")
-                    k_opt = k if space.selects(score) else None
-                    coord.publish(Bounds(lo, hi, k_opt))
+                with tracer.span("worker", track=track, rid=rid, worklist_len=len(worklist)):
+                    for k in worklist:
+                        if skip and k in skip:  # journaled on a previous run
+                            metrics.inc("ks_journaled")
+                            continue
+                        if not should_visit(k):
+                            metrics.inc("ks_skipped")
+                            tracer.event("skip", track=track, k=k, reason="pruned")
+                            continue
+                        t_fit = time.perf_counter()
+                        with tracer.span("fit", track=track, k=k) as sp:
+                            score = plane.evaluate_one(k, should_abort=make_should_abort(k))
+                            sp.set(score=float(score))
+                        metrics.observe("fit_seconds", time.perf_counter() - t_fit)
+                        metrics.inc("ks_visited")
+                        lo = k if space.selects(score) else -float("inf")
+                        hi = k if space.stops(score) else float("inf")
+                        k_opt = k if space.selects(score) else None
+                        with tracer.span("publish", track=track, k=k):
+                            coord.record_visit(k, float(score), rid)
+                            coord.publish(Bounds(lo, hi, k_opt))
             except BaseException as e:  # surface worker crashes to the driver
                 errors.append(e)
 

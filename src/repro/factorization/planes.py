@@ -26,6 +26,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import get_metrics, get_tracer
+
 from .kmeans import kmeans_batched
 from .nmfk import nmfk_score_batched
 
@@ -68,7 +70,14 @@ class _BatchPlaneBase:
             ks = ks + [ks[0]] * (target - n_real)
         self.n_dispatches += 1
         self.n_evals += n_real
-        self.shapes_compiled.add((len(ks), k_pad))
+        shape = (len(ks), k_pad)
+        if shape not in self.shapes_compiled:
+            # new padded shape == a jit cache miss on the next dispatch: the
+            # batched fits are compiled per (batch, k_pad), so recompiles
+            # become visible in the trace instead of silent wall-clock.
+            self.shapes_compiled.add(shape)
+            get_metrics().inc("compile_count")
+            get_tracer().event("compile", track="device:0", batch=shape[0], k_pad=shape[1])
         return ks, k_pad, n_real
 
     def evaluate_one(self, k: int, should_abort=None) -> float:
@@ -109,19 +118,25 @@ class NMFkBatchPlane(_BatchPlaneBase):
         self.use_kernel = use_kernel
 
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
+        tracer = get_tracer()
         padded, k_pad, n_real = self._pad_ks(ks)
-        sc = nmfk_score_batched(
-            self.v,
-            padded,
-            self.key,
-            k_pad=k_pad,
-            n_perturbs=self.n_perturbs,
-            nmf_iters=self.nmf_iters,
-            epsilon=self.epsilon,
-            use_kernel=self.use_kernel,
-        )
-        scores = sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette
-        return [float(s) for s in scores[:n_real]]
+        # "fit" brackets the fused fit+score dispatch (one jit'd ensemble);
+        # "score" brackets device->host sync of the silhouette statistics.
+        with tracer.span("fit", track="device:0", kind="nmfk",
+                         ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad):
+            sc = nmfk_score_batched(
+                self.v,
+                padded,
+                self.key,
+                k_pad=k_pad,
+                n_perturbs=self.n_perturbs,
+                nmf_iters=self.nmf_iters,
+                epsilon=self.epsilon,
+                use_kernel=self.use_kernel,
+            )
+            scores = sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette
+        with tracer.span("score", track="device:0", kind="nmfk", batch=len(padded)):
+            return [float(s) for s in scores[:n_real]]
 
 
 class KMeansBatchPlane(_BatchPlaneBase):
@@ -154,22 +169,26 @@ class KMeansBatchPlane(_BatchPlaneBase):
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
 
+        tracer = get_tracer()
         padded, k_pad, n_real = self._pad_ks(ks)
-        res = kmeans_batched(self.x, padded, self.key, k_pad=k_pad, max_iters=self.max_iters)
+        with tracer.span("fit", track="device:0", kind="kmeans",
+                         ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad):
+            res = kmeans_batched(self.x, padded, self.key, k_pad=k_pad, max_iters=self.max_iters)
         ks_arr = jnp.asarray(padded)
         cluster_mask = jnp.arange(k_pad)[None, :] < ks_arr[:, None]  # (b, k_pad)
         # x stays unbatched (n, d): the jnp scorer tiers broadcast it against
         # the batched labels so the point-pairwise work is done once, while
         # the Pallas tier streams per-lane tiles that never hit HBM.
-        if self.score == "davies_bouldin":
-            scores = davies_bouldin_score_masked(
-                self.x, res.labels, k_pad, cluster_mask=cluster_mask
-            )
-        else:
-            scores = silhouette_score_masked(
-                self.x, res.labels, k_pad, use_kernel=self.use_kernel
-            )
-        return [float(s) for s in scores[:n_real]]
+        with tracer.span("score", track="device:0", kind=self.score, batch=len(padded)):
+            if self.score == "davies_bouldin":
+                scores = davies_bouldin_score_masked(
+                    self.x, res.labels, k_pad, cluster_mask=cluster_mask
+                )
+            else:
+                scores = silhouette_score_masked(
+                    self.x, res.labels, k_pad, use_kernel=self.use_kernel
+                )
+            return [float(s) for s in scores[:n_real]]
 
 
 __all__ = ["NMFkBatchPlane", "KMeansBatchPlane"]

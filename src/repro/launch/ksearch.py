@@ -37,6 +37,7 @@ from repro.factorization.distributed import distributed_nmf, make_local_mesh
 from repro.factorization.nmfk import nmfk_score
 from repro.factorization.planes import NMFkBatchPlane
 from repro.factorization.synthetic import nmf_data
+from repro.obs import NULL_TRACER, Metrics, Tracer, use_metrics, use_tracer
 
 
 def make_submeshes(num_resources: int):
@@ -73,6 +74,12 @@ def main(argv=None) -> dict:
                     "frontiers as one padded vmapped NMFk fit per wave")
     ap.add_argument("--max-wave", type=int, default=None,
                     help="cap ks per batched dispatch (batched executor only)")
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="write a search trace: Chrome-trace/Perfetto JSON "
+                    "(open at ui.perfetto.dev), or JSONL if OUT ends in .jsonl")
+    ap.add_argument("--metrics", default=None, metavar="OUT",
+                    help="write the metrics summary JSON (counters/gauges/"
+                    "histograms + pruning-efficiency block)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -97,6 +104,19 @@ def main(argv=None) -> dict:
         args.stop_threshold if args.early_stop else None,
     )
 
+    # telemetry: a real tracer only when requested (NullTracer otherwise —
+    # allocation-free hot path); metrics are always on but scoped to this
+    # run so summary()'s visit_fraction reflects exactly this search.
+    tracer = Tracer() if args.trace else NULL_TRACER
+    metrics = Metrics()
+    with use_tracer(tracer), use_metrics(metrics):
+        result, dt, extra = _run_search(args, ap, space, v, key, evaluate)
+
+    out = _emit(args, result, dt, extra, tracer, metrics)
+    return out
+
+
+def _run_search(args, ap, space, v, key, evaluate):
     if args.executor == "batched":
         if not args.quiet:
             ignored = (
@@ -130,7 +150,10 @@ def main(argv=None) -> dict:
         result = sched.run(evaluate, skip=visited)
         dt = time.time() - t0
         extra = {"resources": args.resources}
+    return result, dt, extra
 
+
+def _emit(args, result, dt, extra, tracer, metrics) -> dict:
     out = {
         "k_optimal": result.k_optimal,
         "k_true": args.k_true,
@@ -142,6 +165,32 @@ def main(argv=None) -> dict:
         "executor": args.executor,
         **extra,
     }
+    if args.trace:
+        if args.trace.endswith(".jsonl"):
+            n_ev = tracer.export_jsonl(args.trace)
+        else:
+            n_ev = tracer.export_perfetto(args.trace)
+        out["trace"] = {"path": args.trace, "events": n_ev}
+    if args.metrics:
+        summary = metrics.summary()
+        payload = {
+            "summary": summary,
+            "result": {
+                "k_optimal": result.k_optimal,
+                "n_visited": result.n_visited,
+                "n_candidates": result.n_candidates,
+                "visit_fraction": result.visit_fraction,
+            },
+            "seconds": dt,
+            "executor": args.executor,
+        }
+        with open(args.metrics, "w") as f:
+            json.dump(payload, f, indent=1)
+        out["metrics"] = {"path": args.metrics}
+        sf = summary["search"]["visit_fraction"]
+        if sf is not None and abs(sf - result.visit_fraction) > 1e-9 and not args.quiet:
+            print(f"warning: metrics visit_fraction {sf:.3f} != "
+                  f"result {result.visit_fraction:.3f}")
     if not args.quiet:
         print(json.dumps(out, indent=1))
     return out

@@ -23,6 +23,7 @@ from typing import Callable
 
 from repro.core.chunking import rebalance
 from repro.core.traversal import Order
+from repro.obs import get_metrics, get_tracer
 
 
 @dataclasses.dataclass
@@ -65,6 +66,9 @@ class HeartbeatMonitor:
     def check(self) -> list[int]:
         """Returns newly-dead rids and re-plans their work."""
         now = self.clock()
+        ages = [now - r.last_beat for r in self.resources.values() if r.alive]
+        if ages:
+            get_metrics().set_gauge("heartbeat_age_max", max(ages))
         dead = [
             r.rid
             for r in self.resources.values()
@@ -81,10 +85,16 @@ class HeartbeatMonitor:
             return
         r.alive = False
         pool = list(r.worklist)
+        requeued = r.in_flight
         if r.in_flight is not None:
             pool.append(r.in_flight)  # idempotent: safe to redo
             r.in_flight = None
         r.worklist = []
+        get_metrics().inc("failures")
+        get_tracer().event(
+            "resource_failed", track="scheduler", rid=rid,
+            requeued_in_flight=requeued, pool=len(pool),
+        )
         self._redistribute(pool)
 
     def join(self, worklist: list[int] | None = None) -> int:
@@ -93,6 +103,8 @@ class HeartbeatMonitor:
         self.resources[rid] = ResourceView(rid, self.clock(), worklist or [])
         if worklist is None:
             self._rebalance_all()
+        get_metrics().inc("joins")
+        get_tracer().event("resource_joined", track="scheduler", rid=rid)
         return rid
 
     def _survivors(self) -> list[ResourceView]:

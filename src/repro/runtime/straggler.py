@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 import statistics
 
+from repro.obs import get_metrics, get_tracer
+
 
 @dataclasses.dataclass
 class SpeculationPolicy:
@@ -38,3 +40,11 @@ class SpeculationPolicy:
 
     def note_duplicate(self, k: int) -> None:
         self._dup_counts[k] = self._dup_counts.get(k, 0) + 1
+        get_metrics().inc("speculations")
+        get_tracer().event(
+            "speculate", track="scheduler", k=k, duplicates=self._dup_counts[k]
+        )
+
+    def duplicates(self, k: int) -> int:
+        """How many speculative duplicates were launched for ``k``."""
+        return self._dup_counts.get(k, 0)

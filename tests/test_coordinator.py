@@ -1,12 +1,16 @@
 """Coordinator (Redis-replacement) — monotone-merge properties + journal."""
 import math
+import os
 import threading
+import time
 
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import Bounds, FileCoordinator, InProcessCoordinator, make_space
 from repro.core.coordinator import merge_all
+from repro.obs import Metrics, Tracer, use_metrics, use_tracer
 
 bounds_st = st.builds(
     Bounds,
@@ -79,6 +83,85 @@ def test_file_coordinator_replay(tmp_path):
     bounds, visited = c.replay(space.selects, space.stops)
     assert visited == {16, 24}
     assert bounds.lo_bound == 16 and bounds.hi_bound == 24 and bounds.k_optimal == 16
+
+
+def test_stale_lock_broken_with_event(tmp_path):
+    """A lockfile whose holder died is broken on the next acquire — and the
+    break is a visible ``lock_broken`` trace event, not a silent unlink."""
+    c = FileCoordinator(str(tmp_path))
+    with open(c._lock_path, "w") as f:
+        f.write("999999")  # dead holder
+    old = time.time() - 120
+    os.utime(c._lock_path, (old, old))
+    tr, m = Tracer(), Metrics()
+    with use_tracer(tr), use_metrics(m):
+        c.publish(Bounds(3.0, math.inf, 3))  # must break the stale lock
+    assert c.snapshot().k_optimal == 3
+    assert not os.path.exists(c._lock_path)  # released after publish
+    assert m.counter("lock_broken") == 1
+    (ev,) = [e for e in tr.events() if e["name"] == "lock_broken"]
+    assert ev["args"]["age_s"] > 100
+
+
+def test_fresh_lock_never_broken(tmp_path):
+    """A live (recent-mtime) lock must NOT be broken — acquire times out."""
+    c = FileCoordinator(str(tmp_path))
+    with open(c._lock_path, "w") as f:
+        f.write("1")
+    m = Metrics()
+    with use_metrics(m):
+        with pytest.raises(TimeoutError):
+            c._acquire(timeout=0.15, stale=30.0)
+    assert os.path.exists(c._lock_path)  # untouched
+    assert m.counter("lock_broken") == 0
+
+
+def test_stale_lock_not_unlinked_if_replaced(tmp_path, monkeypatch):
+    """The two-waiter race: between this waiter's staleness check and its
+    unlink, another waiter broke the lock and a NEW holder created a fresh
+    one. The re-stat guard must refuse to unlink the fresh lock."""
+    c = FileCoordinator(str(tmp_path))
+    with open(c._lock_path, "w") as f:
+        f.write("1")
+    old = time.time() - 120
+    os.utime(c._lock_path, (old, old))
+
+    real_stat = os.stat
+    calls = {"n": 0}
+
+    def racing_stat(path, *a, **kw):
+        if path == c._lock_path:
+            calls["n"] += 1
+            if calls["n"] == 2:
+                # interleave the other waiter between the staleness check
+                # (call 1) and the pre-unlink re-stat (call 2): it breaks
+                # the stale lock and a new holder creates a fresh one. Our
+                # re-stat then sees a different (ino, mtime) and must NOT
+                # unlink.
+                os.unlink(c._lock_path)
+                with open(c._lock_path, "w") as f:
+                    f.write("42")  # new live holder
+        return real_stat(path, *a, **kw)
+
+    monkeypatch.setattr(os, "stat", racing_stat)
+    m = Metrics()
+    with use_metrics(m):
+        with pytest.raises(TimeoutError):
+            c._acquire(timeout=0.2, stale=30.0)
+    # the fresh holder's lock survived the race
+    assert open(c._lock_path).read() == "42"
+    assert m.counter("lock_broken") == 0
+
+
+def test_file_coordinator_publish_metrics(tmp_path):
+    c = FileCoordinator(str(tmp_path))
+    m = Metrics()
+    with use_metrics(m):
+        c.publish(Bounds(1.0, math.inf, 1))
+        c.publish(Bounds(2.0, math.inf, 2))
+    assert m.counter("publish_count") == 2
+    assert m.histogram("publish_latency_s")["count"] == 2
+    assert m.histogram("lock_wait_s")["count"] == 2
 
 
 def test_file_coordinator_multiprocess_safety(tmp_path):

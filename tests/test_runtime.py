@@ -34,6 +34,45 @@ def test_in_flight_work_requeued_on_failure():
     assert 9 in mon.remaining()  # idempotent re-queue
 
 
+def test_check_on_already_failed_rid_is_stable():
+    """A rid that already failed must not be re-reported by check(), must
+    ignore late beats, and must not trigger another redistribution."""
+    clock = FakeClock()
+    mon = HeartbeatMonitor({0: [1, 5], 1: [3, 7]}, timeout=10, clock=clock)
+    mon.fail(0)
+    worklists_after_fail = {r.rid: list(r.worklist) for r in mon.resources.values()}
+    clock.t = 100.0  # both silent past timeout, but 0 is already dead
+    mon.beat(1)
+    mon.beat(0)  # late beat from a dead resource: ignored
+    assert mon.resources[0].last_beat == 0.0
+    dead = mon.check()
+    assert dead == []  # 0 not re-reported, 1 beat in time
+    assert {r.rid: list(r.worklist) for r in mon.resources.values()} == worklists_after_fail
+    mon.fail(0)  # explicit double-fail is also a no-op
+    assert {r.rid: list(r.worklist) for r in mon.resources.values()} == worklists_after_fail
+
+
+def test_heartbeat_age_gauge_and_failure_events():
+    from repro.obs import Metrics, Tracer, use_metrics, use_tracer
+
+    clock = FakeClock()
+    tr, m = Tracer(), Metrics()
+    with use_tracer(tr), use_metrics(m):
+        mon = HeartbeatMonitor({0: [1, 5], 1: [3, 7]}, timeout=10, clock=clock)
+        clock.t = 4.0
+        mon.beat(1)
+        clock.t = 6.0
+        mon.check()
+        assert m.gauge("heartbeat_age_max") == 6.0  # resource 0 never beat
+        clock.t = 20.0
+        mon.beat(1)  # keep 1 alive; only the silent resource 0 should die
+        dead = mon.check()
+    assert dead == [0]
+    assert m.counter("failures") == 1
+    fails = [e for e in tr.events() if e["name"] == "resource_failed"]
+    assert len(fails) == 1 and fails[0]["args"]["rid"] == 0
+
+
 def test_elastic_join_rebalances():
     clock = FakeClock()
     mon = HeartbeatMonitor({0: list(range(1, 13))}, timeout=10, clock=clock)
@@ -52,6 +91,46 @@ def test_speculation_policy():
     assert not p.should_speculate(5, elapsed=1.0)
     p.note_duplicate(5)
     assert not p.should_speculate(5, elapsed=9.0)  # max_duplicates reached
+
+
+def test_speculation_median_edge_cases():
+    # exactly min_samples completions flips the policy on
+    p = SpeculationPolicy(factor=2.0, min_samples=2)
+    p.observe_completion(1, 1.0)
+    assert not p.should_speculate(9, elapsed=100.0)  # 1 < min_samples
+    p.observe_completion(2, 3.0)
+    # even count: statistics.median interpolates -> (1+3)/2 = 2
+    assert not p.should_speculate(9, elapsed=4.0)  # 4 == factor*median: not >
+    assert p.should_speculate(9, elapsed=4.0 + 1e-9)
+    # a tail-heavy history moves the median, not the mean
+    for d in (3.0, 3.0, 3.0):
+        p.observe_completion(3, d)
+    assert not p.should_speculate(9, elapsed=5.9)  # median now 3 -> cutoff 6
+    assert p.should_speculate(9, elapsed=6.1)
+
+
+def test_speculation_duplicate_accounting_per_k():
+    p = SpeculationPolicy(factor=1.0, min_samples=1, max_duplicates=2)
+    p.observe_completion(1, 1.0)
+    p.note_duplicate(5)
+    assert p.duplicates(5) == 1 and p.duplicates(7) == 0
+    assert p.should_speculate(5, elapsed=9.0)  # 1 < max_duplicates=2
+    p.note_duplicate(5)
+    assert p.duplicates(5) == 2
+    assert not p.should_speculate(5, elapsed=9.0)  # k=5 exhausted...
+    assert p.should_speculate(7, elapsed=9.0)  # ...but k=7 unaffected
+
+
+def test_speculation_emits_metrics_and_events():
+    from repro.obs import Metrics, Tracer, use_metrics, use_tracer
+
+    p = SpeculationPolicy(min_samples=1)
+    tr, m = Tracer(), Metrics()
+    with use_tracer(tr), use_metrics(m):
+        p.note_duplicate(11)
+    assert m.counter("speculations") == 1
+    (ev,) = [e for e in tr.events() if e["name"] == "speculate"]
+    assert ev["args"] == {"k": 11, "duplicates": 1}
 
 
 def test_search_restart_resumes_exactly(tmp_path):
