@@ -10,6 +10,7 @@ Prints ``name,value,derived`` CSV rows:
   bench_kernels     — Pallas kernel parity + tile economics
   bench_scoring     — streaming vs dense silhouette: bytes moved + wall-clock
   bench_roofline    — §Roofline terms from the dry-run artifacts
+  bench_sharded     — mesh-sharded wavefront: wave-throughput vs batched
 
 ``--json out.json`` additionally writes the structured results as
 ``{bench: {metric: value}}`` — the machine-readable form CI archives per
@@ -17,6 +18,12 @@ run so BENCH_*.json artifacts accumulate a perf trajectory over time.
 Every artifact carries a ``_meta`` block (git SHA, ISO timestamp, JAX
 backend/devices, package versions, and the run's metrics ``summary()``)
 so artifacts from different PRs are comparable.
+
+Quick-mode runs are additionally gated against
+``benchmarks/baselines/BENCH_quick_baseline.json``: any metric the
+baseline also records that regresses by more than 20% (in its bad
+direction) fails the run — ``--regress-warn-only`` downgrades that to a
+warning for machines whose timings aren't comparable to the baseline's.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ import json
 import math
 import os
 import platform
+import re
 import subprocess
 import sys
 import time
@@ -71,12 +79,62 @@ def _run_metadata() -> dict:
     return meta
 
 
+def _direction(metric: str) -> int:
+    """+1 if larger is better, -1 if smaller is better, 0 if unknown.
+
+    Matches the repo's metric naming: timings end in ``_us``/``_s`` (often
+    with a ``_n4096``-style size suffix), kernel rows are ``kernel_*``
+    microseconds, ratios/flags/speedups are higher-better. Unknown metrics
+    (counts, percentages whose good direction depends on the table) are
+    not gated — a wrong guess here would turn an improvement into a CI
+    failure.
+    """
+    if any(t in metric for t in ("speedup", "scaling", "match")):
+        return 1
+    if any(t in metric for t in ("overhead", "seconds", "rel_err", "shapes_compiled")):
+        return -1
+    core = re.sub(r"_[nl]\d+$", "", metric)  # strip size/lane suffixes
+    if core.endswith(("_ratio", "_ok")):
+        return 1
+    if core.endswith(("_us", "_s")) or metric.startswith("kernel_"):
+        return -1
+    return 0
+
+
+def check_regressions(
+    results: dict, baseline: dict, threshold: float = 0.20
+) -> list[str]:
+    """Metrics worse than baseline by > threshold (in their bad direction)."""
+    bad = []
+    for bench, metrics in baseline.items():
+        if bench.startswith("_") or bench not in results:
+            continue
+        for metric, base in metrics.items():
+            cur = results[bench].get(metric)
+            d = _direction(metric)
+            if cur is None or d == 0 or not base:
+                continue
+            rel = (cur - base) / abs(base) * d  # positive = improvement
+            if rel < -threshold:
+                bad.append(
+                    f"{bench}/{metric}: {cur:.4g} vs baseline {base:.4g} "
+                    f"({-rel * 100:.0f}% worse)"
+                )
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="full-scale (slow) settings")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write structured {bench: {metric: value}} results to OUT")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                         "baselines", "BENCH_quick_baseline.json"),
+                    metavar="JSON", help="quick-mode regression baseline")
+    ap.add_argument("--regress-warn-only", action="store_true",
+                    help="report >20%% quick-mode regressions without failing")
     args = ap.parse_args()
     quick = not args.full
 
@@ -90,6 +148,7 @@ def main() -> None:
         bench_obs_overhead,
         bench_roofline,
         bench_scoring,
+        bench_sharded,
         bench_visits,
     )
 
@@ -102,6 +161,7 @@ def main() -> None:
         "scoring": bench_scoring.run,
         "roofline": bench_roofline.run,
         "obs_overhead": bench_obs_overhead.run,
+        "sharded": bench_sharded.run,
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -134,6 +194,19 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)
+    # quick-mode perf gate: compare against the committed baseline (only
+    # metrics the baseline records, only those with a known good direction)
+    if quick and args.baseline and os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        regressions = check_regressions(results, baseline)
+        for msg in regressions:
+            print(f"# REGRESSION {msg}", flush=True)
+        if regressions and not args.regress_warn_only:
+            failures += 1
+        elif regressions:
+            print(f"# {len(regressions)} regression(s) ignored (--regress-warn-only)",
+                  flush=True)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,58 @@
+"""Persistent jit compile cache wiring for repeated k-searches.
+
+Shape bucketing (``repro.factorization.batching.bucket_batch``) caps the
+number of distinct compiled ``(batch, k_pad)`` shapes *within* one search;
+this module makes those few compilations survive *across* processes: with
+``jax_compilation_cache_dir`` set, XLA executables are written to disk and
+the next search over the same data shape deserializes instead of
+recompiling — the dominant cold-start cost of the batched/sharded
+executors.
+
+JAX only persists entries above built-in time/size thresholds by default
+(tuned for multi-minute TPU compiles); ``enable_persistent_cache`` lowers
+both to zero so the second-long CPU/GPU compiles of the wavefront planes
+are cached too.
+
+This is deliberately config-only — no jax device state is touched at
+import time, so ``repro.core`` stays importable before XLA_FLAGS tricks
+like ``--xla_force_host_platform_device_count``.
+"""
+from __future__ import annotations
+
+import os
+
+
+def enable_persistent_cache(
+    cache_dir: str,
+    min_compile_time_secs: float = 0.0,
+    min_entry_size_bytes: int = -1,
+) -> bool:
+    """Point jax's persistent compilation cache at ``cache_dir``.
+
+    Returns True if the cache was configured, False if this jax build does
+    not expose the config knobs (older/stripped builds) — callers treat
+    False as "run without a cache", never as an error. Call before the
+    first jit dispatch; entries compiled earlier are not retro-cached.
+    """
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # persist everything: the default thresholds skip sub-second compiles
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", min_compile_time_secs)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", min_entry_size_bytes)
+    except (AttributeError, ValueError):  # pragma: no cover - jax without the knobs
+        return False
+    return True
+
+
+def cache_entry_count(cache_dir: str) -> int:
+    """Number of serialized executables currently in ``cache_dir``."""
+    try:
+        return sum(1 for e in os.scandir(cache_dir) if e.is_file())
+    except FileNotFoundError:
+        return 0
+
+
+__all__ = ["enable_persistent_cache", "cache_entry_count"]

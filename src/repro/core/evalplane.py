@@ -90,6 +90,10 @@ class _BatchOnlyAdapter:
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         return self.plane.evaluate_batch(ks)
 
+    @property
+    def last_lane_utilization(self):
+        return getattr(self.plane, "last_lane_utilization", None)
+
 
 def as_eval_plane(evaluate) -> EvalPlane:
     """Coerce a scalar callable or an EvalPlane-shaped object to EvalPlane."""
@@ -209,6 +213,12 @@ class WavefrontScheduler:
                         f"evaluate_batch returned {len(scores)} scores for {len(chunk)} ks"
                     )
                 metrics.observe("wave_size", len(chunk))
+                # mesh-sharded planes report real/dispatched lanes of the
+                # dispatch they just ran; surface it as a live gauge next to
+                # the wave_size histogram
+                util = getattr(plane, "last_lane_utilization", None)
+                if util is not None:
+                    metrics.set_gauge("lane_utilization", float(util))
                 with tracer.span("publish", track="wavefront", wave=wave_idx):
                     for k, score in zip(chunk, scores):
                         state.record(k, float(score), resource=wave_idx)

@@ -7,13 +7,74 @@ and every lane runs at a common padded rank ``k_pad >= max(ks)``. Keeping
 the validation and key derivation here stops the schedule (which the
 batched-vs-per-k equivalence tests depend on) from drifting between entry
 points.
+
+This module also owns the **shape-bucketing policy** the evaluation planes
+use to pick a padded batch size (``bucket_batch``): pow2 rounding with a
+floor (the mesh lane count for sharded planes) keeps the set of distinct
+compiled ``(batch, k_pad)`` shapes small and stable across searches, and
+reuse of an already-compiled bucket makes scalar fallbacks free.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def round_up_multiple(n: int, step: int) -> int:
+    return ((n + step - 1) // step) * step
+
+
+def bucket_batch(
+    n_real: int,
+    *,
+    lanes: int = 1,
+    bucket_min: int = 1,
+    cap: int | None = None,
+    compiled: Iterable[int] = (),
+) -> int:
+    """Pick the padded batch size for a dispatch of ``n_real`` lanes.
+
+    Policy (in priority order):
+      1. fresh target = pow2(max(n_real, bucket_min)) rounded up to a
+         multiple of ``lanes`` (sharded planes split the batch evenly over
+         the mesh's lane axis);
+      2. ``cap`` bounds the padding (never below n_real itself, rounded to
+         a lane multiple — correctness beats the cap when they conflict);
+      3. if the fresh target is not yet compiled but some already-compiled
+         bucket can hold this dispatch (>= n_real, within the cap), reuse
+         the smallest such bucket instead of minting a new shape — this is
+         what keeps scalar fallbacks and odd-sized waves from each paying
+         their own jit compilation.
+    """
+    if n_real < 1:
+        raise ValueError("n_real must be >= 1")
+    target = next_pow2(max(n_real, bucket_min))
+    if lanes > 1:
+        target = round_up_multiple(target, lanes)
+    floor = round_up_multiple(n_real, lanes) if lanes > 1 else n_real
+    cap_r = None
+    if cap is not None:
+        cap_r = round_up_multiple(cap, lanes) if lanes > 1 else cap
+        target = max(floor, min(target, cap_r))
+    compiled = set(compiled)
+    if target in compiled:
+        return target
+    fits = sorted(
+        b for b in compiled if b >= floor and (cap_r is None or b <= max(cap_r, floor))
+    )
+    if fits:
+        return fits[0]
+    return target
 
 
 def batched_lanes(

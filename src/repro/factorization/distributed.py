@@ -28,15 +28,24 @@ from jax.sharding import PartitionSpec as P
 
 try:  # jax >= 0.6 stable API
     from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-
 except ImportError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _shard_map_old
+    from jax.experimental.shard_map import shard_map as _shard_map
 
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = True):
+    """Version shim. ``check_rep=False`` is needed where the replication of
+    an output can't be statically inferred (e.g. scores derived from RNG +
+    all_gather in the sharded NMFk plane) — newer jax renamed the kwarg."""
+    if check_rep:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+    except TypeError:  # pragma: no cover - jax >= 0.7 renamed to check_vma
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
 
 
 Array = jax.Array
@@ -169,6 +178,61 @@ def distributed_rescal(
     x = jax.device_put(x, NamedSharding(mesh, P(None, axis, None)))
     a, r, err = jax.jit(fn)(x, key)
     return DistRESCALResult(a, r, err)
+
+
+def _dnmf_masked_local(
+    v_l: Array,
+    k_eff: Array,
+    key: Array,
+    k_pad: int,
+    iters: int,
+    axis: str,
+    n_total: int,
+) -> tuple[Array, Array]:
+    """Per-shard *masked* NMF body: ``_nmf_masked`` distributed over ``axis``.
+
+    Same psum structure as ``_dnmf_local`` (H-update Gram matrices are the
+    only collectives), but draw-compatible with the single-device masked
+    fit: W and H are drawn full-shape from the replicated ``key`` exactly as
+    ``_nmf_masked`` draws them, and each shard keeps only its row block of
+    W. All cross-shard reductions are psums of k_pad×{m,k_pad} Grams, so
+    the result matches ``_nmf_masked(v, k_eff, key, k_pad, iters)`` up to
+    float reduction order.
+
+    v_l: (n_local, m) local row block. Returns (w_l, rel_error) with
+    rel_error the *global* ||V - WH||_F / ||V||_F.
+    """
+    n_l, m = v_l.shape
+    idx = jax.lax.axis_index(axis)
+    active = jnp.arange(k_pad) < k_eff
+    kw, kh = jax.random.split(key)
+    v_mean = jax.lax.psum(jnp.sum(v_l), axis) / (n_total * m)
+    scale = jnp.sqrt(jnp.maximum(v_mean, _EPS) / k_eff)
+    # replicated full-shape draw, then slice this shard's rows — bit-compatible
+    # with the single-device init (the Gram psums below are where fp order
+    # can differ, not the init)
+    w_full = scale * jax.random.uniform(kw, (n_total, k_pad), v_l.dtype, 0.1, 1.0)
+    w_l = jax.lax.dynamic_slice_in_dim(w_full, idx * n_l, n_l, axis=0)
+    h = scale * jax.random.uniform(kh, (k_pad, m), v_l.dtype, 0.1, 1.0)
+    w_l = w_l * active[None, :]
+    h = h * active[:, None]
+
+    def body(_, carry):
+        w_l, h = carry
+        wtv = jax.lax.psum(w_l.T @ v_l, axis)  # (k_pad, m)
+        wtw = jax.lax.psum(w_l.T @ w_l, axis)  # (k_pad, k_pad)
+        h = h * wtv / (wtw @ h + _EPS)
+        h = h * active[:, None]
+        hht = h @ h.T  # local: H replicated
+        w_l = w_l * (v_l @ h.T) / (w_l @ hht + _EPS)
+        w_l = w_l * active[None, :]
+        return w_l, h
+
+    w_l, h = jax.lax.fori_loop(0, iters, body, (w_l, h))
+    sq = jax.lax.psum(jnp.sum((v_l - w_l @ h) ** 2), axis)
+    vsq = jax.lax.psum(jnp.sum(v_l**2), axis)
+    err = jnp.sqrt(sq) / jnp.maximum(jnp.sqrt(vsq), _EPS)
+    return w_l, err
 
 
 def make_local_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:

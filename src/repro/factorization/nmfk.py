@@ -144,6 +144,37 @@ def _align_columns_masked(w_all: Array, k_eff: Array) -> Array:
     return assigns.reshape(p * k_pad)
 
 
+def _pooled_w_score(
+    w_all: Array,
+    errs: Array,
+    k_eff: Array,
+    k_pad: int,
+    n_perturbs: int,
+    use_kernel: bool,
+) -> NMFkScore:
+    """Score a fitted perturbation ensemble: the shared tail of the masked
+    scorers. w_all: (p, n, k_pad) raw W factors, errs: (p,) rel errors."""
+    active = jnp.arange(k_pad) < k_eff
+    w_all = w_all / jnp.maximum(jnp.linalg.norm(w_all, axis=1, keepdims=True), 1e-12)
+    labels = _align_columns_masked(w_all, k_eff)  # (p*k_pad,)
+    cols = jnp.transpose(w_all, (0, 2, 1)).reshape(-1, w_all.shape[1])  # (p*k_pad, n)
+    point_mask = jnp.tile(active, n_perturbs)  # (p*k_pad,)
+    # one streamed dist-sums pass yields both statistics: mean over active
+    # points and NMFk's per-cluster min over active clusters
+    s = silhouette_samples_masked(
+        cols, labels, num_clusters=k_pad, point_mask=point_mask, use_kernel=use_kernel
+    )
+    sil_mean = jnp.sum(s) / jnp.maximum(jnp.sum(point_mask), 1.0)
+    onehot = jax.nn.one_hot(labels, k_pad, dtype=cols.dtype) * point_mask[:, None]
+    sizes = jnp.sum(onehot, axis=0)
+    per_cluster = (onehot.T @ s) / jnp.maximum(sizes, 1.0)
+    min_sil = jnp.min(jnp.where(active, per_cluster, jnp.inf))
+    # k=1: single cluster, silhouette undefined -> 1.0 (stable)
+    min_sil = jnp.where(k_eff > 1, min_sil, 1.0)
+    sil_mean = jnp.where(k_eff > 1, sil_mean, 1.0)
+    return NMFkScore(min_sil, sil_mean, jnp.mean(errs))
+
+
 @functools.partial(jax.jit, static_argnames=("k_pad", "n_perturbs", "nmf_iters", "use_kernel"))
 def _nmfk_score_masked(
     v: Array,
@@ -164,7 +195,6 @@ def _nmfk_score_masked(
     kp, kf = jax.random.split(key)
     pkeys = jax.random.split(kp, n_perturbs)
     fkeys = jax.random.split(kf, n_perturbs)
-    active = jnp.arange(k_pad) < k_eff
 
     def fit_one(pk, fk):
         vp = _perturb(pk, v, epsilon)
@@ -172,24 +202,50 @@ def _nmfk_score_masked(
         return res.w, res.rel_error
 
     w_all, errs = jax.vmap(fit_one)(pkeys, fkeys)  # (p, n, k_pad), (p,)
-    w_all = w_all / jnp.maximum(jnp.linalg.norm(w_all, axis=1, keepdims=True), 1e-12)
-    labels = _align_columns_masked(w_all, k_eff)  # (p*k_pad,)
-    cols = jnp.transpose(w_all, (0, 2, 1)).reshape(-1, v.shape[0])  # (p*k_pad, n)
-    point_mask = jnp.tile(active, n_perturbs)  # (p*k_pad,)
-    # one streamed dist-sums pass yields both statistics: mean over active
-    # points and NMFk's per-cluster min over active clusters
-    s = silhouette_samples_masked(
-        cols, labels, num_clusters=k_pad, point_mask=point_mask, use_kernel=use_kernel
-    )
-    sil_mean = jnp.sum(s) / jnp.maximum(jnp.sum(point_mask), 1.0)
-    onehot = jax.nn.one_hot(labels, k_pad, dtype=cols.dtype) * point_mask[:, None]
-    sizes = jnp.sum(onehot, axis=0)
-    per_cluster = (onehot.T @ s) / jnp.maximum(sizes, 1.0)
-    min_sil = jnp.min(jnp.where(active, per_cluster, jnp.inf))
-    # k=1: single cluster, silhouette undefined -> 1.0 (stable)
-    min_sil = jnp.where(k_eff > 1, min_sil, 1.0)
-    sil_mean = jnp.where(k_eff > 1, sil_mean, 1.0)
-    return NMFkScore(min_sil, sil_mean, jnp.mean(errs))
+    return _pooled_w_score(w_all, errs, k_eff, k_pad, n_perturbs, use_kernel)
+
+
+def _nmfk_score_masked_dist(
+    v_l: Array,
+    k_eff: Array,
+    key: Array,
+    k_pad: int,
+    data_axis: str,
+    n_total: int,
+    n_perturbs: int = 8,
+    nmf_iters: int = 150,
+    epsilon: float = 0.015,
+    use_kernel: bool = False,
+) -> NMFkScore:
+    """``_nmfk_score_masked`` with the fit row-distributed over ``data_axis``.
+
+    Runs inside a shard_map body: v_l is this shard's row block. Each
+    perturbation draws the *full* (n, m) noise matrix from the replicated
+    key and slices its rows, so the fit consumes exactly the draws the
+    single-device path consumes; the NMF itself is ``_dnmf_masked_local``
+    (pyDNMFk psum structure). W is all-gathered (n×k_pad per perturbation —
+    tiny next to V) and the pooled-column scoring runs replicated.
+    """
+    from .distributed import _dnmf_masked_local
+
+    n_l, m = v_l.shape
+    idx = jax.lax.axis_index(data_axis)
+    kp, kf = jax.random.split(key)
+    pkeys = jax.random.split(kp, n_perturbs)
+    fkeys = jax.random.split(kf, n_perturbs)
+
+    def fit_one(pk, fk):
+        noise = jax.random.uniform(
+            pk, (n_total, m), v_l.dtype, 1.0 - epsilon, 1.0 + epsilon
+        )
+        vp_l = v_l * jax.lax.dynamic_slice_in_dim(noise, idx * n_l, n_l, axis=0)
+        return _dnmf_masked_local(
+            vp_l, k_eff, fk, k_pad, iters=nmf_iters, axis=data_axis, n_total=n_total
+        )
+
+    w_all_l, errs = jax.vmap(fit_one)(pkeys, fkeys)  # (p, n_l, k_pad), (p,)
+    w_all = jax.lax.all_gather(w_all_l, data_axis, axis=1, tiled=True)  # (p, n, k_pad)
+    return _pooled_w_score(w_all, errs, k_eff, k_pad, n_perturbs, use_kernel)
 
 
 def nmfk_score_batched(
@@ -222,6 +278,107 @@ def nmfk_score_batched(
             use_kernel=use_kernel,
         )
     )(ks_arr, keys)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_score_fn(
+    mesh,
+    k_pad: int,
+    n_perturbs: int,
+    nmf_iters: int,
+    epsilon: float,
+    use_kernel: bool,
+    lane_axis: str,
+    data_axis: str,
+):
+    """Build (once per config) the jitted shard_map'd wave scorer.
+
+    The returned callable takes ``(ks_arr, keys, v)`` and is cached so every
+    wave of the same padded batch shape reuses one compiled executable —
+    rebuilding the shard_map per call would defeat the jit cache entirely.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .distributed import shard_map
+
+    shape = dict(mesh.shape)
+    data = shape.get(data_axis, 1)
+
+    if data == 1:
+        def body(ks_l, keys_l, v):
+            return jax.vmap(
+                lambda k_eff, sub: _nmfk_score_masked(
+                    v, k_eff, sub, k_pad,
+                    n_perturbs=n_perturbs, nmf_iters=nmf_iters,
+                    epsilon=epsilon, use_kernel=use_kernel,
+                )
+            )(ks_l, keys_l)
+
+        in_specs = (P(lane_axis), P(lane_axis, None), P())
+    else:
+        def body(ks_l, keys_l, v_l):
+            n_total = v_l.shape[0] * data
+            return jax.vmap(
+                lambda k_eff, sub: _nmfk_score_masked_dist(
+                    v_l, k_eff, sub, k_pad, data_axis, n_total,
+                    n_perturbs=n_perturbs, nmf_iters=nmf_iters,
+                    epsilon=epsilon, use_kernel=use_kernel,
+                )
+            )(ks_l, keys_l)
+
+        in_specs = (P(lane_axis), P(lane_axis, None), P(data_axis, None))
+
+    out_specs = NMFkScore(P(lane_axis), P(lane_axis), P(lane_axis))
+    # data-sharded scores are replicated over the data axis (all_gather'd W,
+    # psum'd errors) but rep inference can't see through the RNG draws
+    return jax.jit(shard_map(body, mesh, in_specs, out_specs, check_rep=(data == 1)))
+
+
+def nmfk_score_sharded(
+    v: Array,
+    ks: Sequence[int],
+    key: Array,
+    mesh,
+    k_pad: int | None = None,
+    n_perturbs: int = 8,
+    nmf_iters: int = 150,
+    epsilon: float = 0.015,
+    use_kernel: bool = False,
+    lane_axis: str = "lane",
+    data_axis: str = "data",
+) -> NMFkScore:
+    """``nmfk_score_batched`` sharded over a 2-D ``Mesh((lane, data))``.
+
+    The wave's k axis is split over ``lane_axis`` (each device group fits a
+    disjoint slice of the ensemble); when the mesh has a non-trivial
+    ``data_axis``, V's rows are additionally sharded over it and each fit
+    runs the pyDNMFk psum structure — the paper's parallel-over-k ×
+    distributed-within-k composition in one jit'd dispatch. The key
+    schedule is lane i = ``fold_in(key, ks[i])``, identical to the batched
+    and scalar paths, so scores agree with ``nmfk_score_batched`` (exactly
+    for lane-only meshes; to psum reduction order under data sharding).
+
+    Requires len(ks) divisible by the lane count (planes guarantee this by
+    bucketing the batch to a lane multiple) and, when data > 1, v's row
+    count divisible by the data-axis size.
+    """
+    ks_arr, keys, k_pad = batched_lanes(ks, key, k_pad)
+    shape = dict(mesh.shape)
+    lanes = shape[lane_axis]
+    data = shape.get(data_axis, 1)
+    if ks_arr.shape[0] % lanes:
+        raise ValueError(
+            f"wave size {ks_arr.shape[0]} not divisible by lane count {lanes}"
+        )
+    if data > 1 and v.shape[0] % data:
+        raise ValueError(
+            f"v rows {v.shape[0]} not divisible by data-axis size {data}"
+        )
+    fn = _sharded_score_fn(
+        mesh, int(k_pad), int(n_perturbs), int(nmf_iters), float(epsilon),
+        bool(use_kernel), lane_axis, data_axis,
+    )
+    return fn(ks_arr, keys, v)
 
 
 def make_nmfk_evaluator(

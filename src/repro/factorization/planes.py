@@ -5,19 +5,40 @@ These are the hardware-shaped back ends of the wavefront executor
 becomes ONE vmapped, jit'd fit at a common padded rank, so the per-k
 trace/JIT/dispatch cost the thread path pays |wave| times is paid once.
 
+Two dispatch modes, selected by the ``mesh=`` option:
+
+  * **single-device** (``mesh=None``, default): the padded wave runs as one
+    vmapped fit on the default device — PR 1's batched executor.
+  * **mesh-sharded**: a 2-D ``Mesh((lane, data))`` splits the wave's k axis
+    over the ``lane`` axis (each device group fits a disjoint slice of the
+    padded ensemble via shard_map) and, for the NMFk plane, optionally
+    shards V's rows over the ``data`` axis reusing the pyDNMFk psum
+    structure — the paper's parallel-over-k × distributed-within-k
+    composition inside one jit'd dispatch. Build the mesh with
+    ``repro.launch.mesh.make_wave_mesh``.
+
 Shape discipline (what keeps compile counts ~O(1) instead of O(|K|)):
 
   * the rank axis is padded to a fixed ``k_pad`` (default: the largest k
     the plane will ever see — pass the top of the search range);
-  * the batch axis is padded to the next power of two (duplicating the
-    first k; duplicate lanes are discarded), so every wave of similar size
-    reuses the same compiled executable. ``WavefrontScheduler(max_wave=N)``
-    sets the plane's ``dispatch_cap`` so this padding never exceeds an
-    explicit memory bound; ``pad_batch=False`` disables it entirely.
+  * the batch axis is bucketed by ``repro.factorization.batching.
+    bucket_batch``: pow2 rounding with a floor of ``bucket_min`` (defaults
+    to the mesh lane count so every dispatch splits evenly over lanes),
+    and **reuse of already-compiled buckets** — a scalar fallback or an
+    odd-sized wave rides the nearest compiled ``(batch, k_pad)`` shape
+    instead of minting its own. ``WavefrontScheduler(max_wave=N)`` sets the
+    plane's ``dispatch_cap`` so padding never exceeds an explicit memory
+    bound; ``pad_batch=False`` disables pow2 bucketing (lane-multiple
+    padding still applies under a mesh).
 
 ``shapes_compiled`` records the distinct (batch, k_pad) shapes dispatched —
-a deterministic proxy for jit compilations that the wavefront benchmark
-compares against the thread path's one-compilation-per-distinct-k.
+a deterministic proxy for jit compilations that the wavefront benchmarks
+compare against the thread path's one-compilation-per-distinct-k.
+
+Telemetry: every dispatch observes ``lane_utilization`` (real lanes /
+dispatched lanes) and, under a mesh, emits per-device-group ``lane`` spans
+on ``device:{i}`` tracks so a Perfetto trace shows which ks each lane group
+carried through the wave.
 """
 from __future__ import annotations
 
@@ -28,33 +49,48 @@ import jax.numpy as jnp
 
 from repro.obs import get_metrics, get_tracer
 
+from .batching import bucket_batch, round_up_multiple
 from .kmeans import kmeans_batched
-from .nmfk import nmfk_score_batched
+from .nmfk import nmfk_score_batched, nmfk_score_sharded
 
 Array = jax.Array
 
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
-
-
 class _BatchPlaneBase:
-    """Shared padding / accounting for the batched factorization planes."""
+    """Shared padding / bucketing / accounting for the batched planes."""
 
-    def __init__(self, k_pad: int | None, pad_batch: bool):
+    def __init__(
+        self,
+        k_pad: int | None,
+        pad_batch: bool,
+        mesh=None,
+        lane_axis: str = "lane",
+        data_axis: str = "data",
+        bucket_min: int | None = None,
+    ):
         self.k_pad = k_pad
         self.pad_batch = pad_batch
+        self.mesh = mesh
+        self.lane_axis = lane_axis
+        self.data_axis = data_axis
+        shape = dict(mesh.shape) if mesh is not None else {}
+        if mesh is not None and lane_axis not in shape:
+            raise ValueError(f"mesh {mesh} has no {lane_axis!r} axis")
+        self.lane_count = shape.get(lane_axis, 1)
+        self.data_count = shape.get(data_axis, 1)
+        # pow2 floor: pad small waves up to one full lane sweep so every
+        # wave size below the lane count shares a single compiled shape
+        self.bucket_min = bucket_min if bucket_min is not None else max(self.lane_count, 1)
         # dispatch cap (number of lanes per batch). WavefrontScheduler sets
-        # this to its max_wave so pow2 batch padding never exceeds the
+        # this to its max_wave so batch padding never exceeds the
         # device-memory bound the cap was chosen for.
         self.dispatch_cap: int | None = None
         self.n_dispatches = 0
         self.n_evals = 0
         self.shapes_compiled: set[tuple[int, int]] = set()
+        self.last_lane_utilization: float | None = None
 
+    # -- padding ----------------------------------------------------------------
     def _pad_ks(self, ks: Sequence[int]) -> tuple[list[int], int, int]:
         ks = [int(k) for k in ks]
         if not ks:
@@ -64,12 +100,25 @@ class _BatchPlaneBase:
             raise ValueError(f"plane k_pad={k_pad} smaller than requested k={max(ks)}")
         n_real = len(ks)
         if self.pad_batch:
-            target = _next_pow2(n_real)
-            if self.dispatch_cap is not None:
-                target = max(n_real, min(target, self.dispatch_cap))
-            ks = ks + [ks[0]] * (target - n_real)
+            target = bucket_batch(
+                n_real,
+                lanes=self.lane_count,
+                bucket_min=self.bucket_min,
+                cap=self.dispatch_cap,
+                compiled=(b for b, kp in self.shapes_compiled if kp == k_pad),
+            )
+        elif self.lane_count > 1:
+            # no pow2 bucketing, but a sharded dispatch must still split
+            # evenly over the mesh's lane axis
+            target = round_up_multiple(n_real, self.lane_count)
+        else:
+            target = n_real
+        ks = ks + [ks[0]] * (target - n_real)
         self.n_dispatches += 1
         self.n_evals += n_real
+        util = n_real / len(ks)
+        self.last_lane_utilization = util
+        get_metrics().observe("lane_utilization", util)
         shape = (len(ks), k_pad)
         if shape not in self.shapes_compiled:
             # new padded shape == a jit cache miss on the next dispatch: the
@@ -77,11 +126,38 @@ class _BatchPlaneBase:
             # become visible in the trace instead of silent wall-clock.
             self.shapes_compiled.add(shape)
             get_metrics().inc("compile_count")
-            get_tracer().event("compile", track="device:0", batch=shape[0], k_pad=shape[1])
+            get_tracer().event(
+                "compile", track=self._dispatch_track(), batch=shape[0], k_pad=shape[1],
+                lanes=self.lane_count, data=self.data_count,
+            )
         return ks, k_pad, n_real
 
+    # -- telemetry ---------------------------------------------------------------
+    def _dispatch_track(self) -> str:
+        return "device:all" if self.mesh is not None else "device:0"
+
+    def _emit_lane_spans(
+        self, tracer, t0_us: float, padded: list[int], n_real: int, kind: str
+    ) -> None:
+        """Retroactive per-device-group spans: lane group i carried the
+        contiguous slice padded[i*per:(i+1)*per] for the whole dispatch."""
+        if self.mesh is None or self.lane_count <= 1 or not tracer.enabled:
+            return
+        dur = max(tracer.now_us() - t0_us, 0.0)
+        per = len(padded) // self.lane_count
+        for i in range(self.lane_count):
+            lane_ks = padded[i * per : (i + 1) * per]
+            real = max(0, min(n_real - i * per, per))
+            tracer.add_span(
+                "lane", t0_us, dur, track=f"device:{i}",
+                kind=kind, ks=lane_ks, n_real=real, data_shards=self.data_count,
+            )
+
     def evaluate_one(self, k: int, should_abort=None) -> float:
-        del should_abort  # one fused dispatch; no chunk boundary to poll
+        # one fused dispatch; no chunk boundary to poll. Bucketing makes
+        # this reuse the nearest already-compiled (batch, k_pad) shape
+        # rather than compiling a batch-of-one executable.
+        del should_abort
         return self.evaluate_batch([k])[0]
 
 
@@ -92,6 +168,11 @@ class NMFkBatchPlane(_BatchPlaneBase):
     ``make_nmfk_evaluator`` — so the batched and threaded executors agree
     on the score landscape (exactly at k == k_pad, to init-draw noise
     below it).
+
+    With ``mesh=`` the ensemble is shard_map'd: k-lanes split over the
+    ``lane`` axis; if the mesh's ``data`` axis is non-trivial, V's rows are
+    additionally sharded and each fit runs the distributed psum structure
+    (requires ``v.shape[0]`` divisible by the data-axis size).
     """
 
     def __init__(
@@ -105,10 +186,18 @@ class NMFkBatchPlane(_BatchPlaneBase):
         k_pad: int | None = None,
         pad_batch: bool = True,
         use_kernel: bool = False,
+        mesh=None,
+        lane_axis: str = "lane",
+        data_axis: str = "data",
+        bucket_min: int | None = None,
     ):
-        super().__init__(k_pad, pad_batch)
+        super().__init__(k_pad, pad_batch, mesh, lane_axis, data_axis, bucket_min)
         if statistic not in ("min", "mean"):
             raise ValueError(f"statistic must be 'min' or 'mean', got {statistic!r}")
+        if self.data_count > 1 and v.shape[0] % self.data_count:
+            raise ValueError(
+                f"v rows {v.shape[0]} not divisible by data-axis size {self.data_count}"
+            )
         self.v = v
         self.key = key
         self.n_perturbs = n_perturbs
@@ -117,26 +206,34 @@ class NMFkBatchPlane(_BatchPlaneBase):
         self.statistic = statistic
         self.use_kernel = use_kernel
 
+    def _score_wave(self, padded: Sequence[int], k_pad: int):
+        if self.mesh is not None:
+            return nmfk_score_sharded(
+                self.v, padded, self.key, self.mesh,
+                k_pad=k_pad, n_perturbs=self.n_perturbs, nmf_iters=self.nmf_iters,
+                epsilon=self.epsilon, use_kernel=self.use_kernel,
+                lane_axis=self.lane_axis, data_axis=self.data_axis,
+            )
+        return nmfk_score_batched(
+            self.v, padded, self.key,
+            k_pad=k_pad, n_perturbs=self.n_perturbs, nmf_iters=self.nmf_iters,
+            epsilon=self.epsilon, use_kernel=self.use_kernel,
+        )
+
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         tracer = get_tracer()
         padded, k_pad, n_real = self._pad_ks(ks)
+        t0_us = tracer.now_us()
         # "fit" brackets the fused fit+score dispatch (one jit'd ensemble);
         # "score" brackets device->host sync of the silhouette statistics.
-        with tracer.span("fit", track="device:0", kind="nmfk",
+        with tracer.span("fit", track=self._dispatch_track(), kind="nmfk",
                          ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad):
-            sc = nmfk_score_batched(
-                self.v,
-                padded,
-                self.key,
-                k_pad=k_pad,
-                n_perturbs=self.n_perturbs,
-                nmf_iters=self.nmf_iters,
-                epsilon=self.epsilon,
-                use_kernel=self.use_kernel,
-            )
+            sc = self._score_wave(padded, k_pad)
             scores = sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette
-        with tracer.span("score", track="device:0", kind="nmfk", batch=len(padded)):
-            return [float(s) for s in scores[:n_real]]
+        with tracer.span("score", track=self._dispatch_track(), kind="nmfk", batch=len(padded)):
+            out = [float(s) for s in scores[:n_real]]
+        self._emit_lane_spans(tracer, t0_us, padded, n_real, kind="nmfk")
+        return out
 
 
 class KMeansBatchPlane(_BatchPlaneBase):
@@ -145,6 +242,10 @@ class KMeansBatchPlane(_BatchPlaneBase):
     Lane i reproduces ``kmeans(x, ks[i], fold_in(key, ks[i]))`` exactly
     (masked fits are draw-for-draw identical to per-k fits), so this plane
     matches a threaded K-Means evaluator score-for-score.
+
+    ``mesh=`` shards the wave's k axis over the mesh's ``lane`` axis; the
+    data matrix stays replicated (K-Means assignment has no pyDNMFk-style
+    Gram psum structure to reuse — a data axis of size > 1 is rejected).
     """
 
     def __init__(
@@ -156,22 +257,77 @@ class KMeansBatchPlane(_BatchPlaneBase):
         k_pad: int | None = None,
         pad_batch: bool = True,
         use_kernel: bool = False,
+        mesh=None,
+        lane_axis: str = "lane",
+        data_axis: str = "data",
+        bucket_min: int | None = None,
     ):
-        super().__init__(k_pad, pad_batch)
+        super().__init__(k_pad, pad_batch, mesh, lane_axis, data_axis, bucket_min)
         if score not in ("davies_bouldin", "silhouette"):
             raise ValueError(f"score must be 'davies_bouldin' or 'silhouette', got {score!r}")
+        if self.data_count > 1:
+            raise ValueError("KMeansBatchPlane supports lane-only meshes (data axis must be 1)")
         self.x = x
         self.key = key
         self.score = score
         self.max_iters = max_iters
         self.use_kernel = use_kernel
+        self._sharded_fns: dict[int, object] = {}
+
+    def _sharded_fn(self, k_pad: int):
+        """Jitted shard_map'd fit+score for this plane's mesh (per k_pad)."""
+        fn = self._sharded_fns.get(k_pad)
+        if fn is not None:
+            return fn
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
+
+        from .distributed import shard_map
+        from .kmeans import _kmeans_masked
+
+        score, max_iters, use_kernel = self.score, self.max_iters, self.use_kernel
+        lane = self.lane_axis
+
+        def body(ks_l, keys_l, x):
+            res = jax.vmap(
+                lambda k_eff, sub: _kmeans_masked(x, k_eff, sub, k_pad, max_iters)
+            )(ks_l, keys_l)
+            if score == "davies_bouldin":
+                cluster_mask = jnp.arange(k_pad)[None, :] < ks_l[:, None]
+                return davies_bouldin_score_masked(
+                    x, res.labels, k_pad, cluster_mask=cluster_mask
+                )
+            return silhouette_score_masked(x, res.labels, k_pad, use_kernel=use_kernel)
+
+        fn = jax.jit(shard_map(
+            body, self.mesh,
+            in_specs=(P(lane), P(lane, None), P()),
+            out_specs=P(lane),
+            check_rep=False,  # scores replicated only over trivial axes; RNG defeats inference
+        ))
+        self._sharded_fns[k_pad] = fn
+        return fn
 
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
 
+        from .batching import batched_lanes
+
         tracer = get_tracer()
         padded, k_pad, n_real = self._pad_ks(ks)
-        with tracer.span("fit", track="device:0", kind="kmeans",
+        t0_us = tracer.now_us()
+        if self.mesh is not None:
+            with tracer.span("fit", track=self._dispatch_track(), kind="kmeans",
+                             ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad):
+                ks_arr, keys, k_pad = batched_lanes(padded, self.key, k_pad)
+                scores = self._sharded_fn(k_pad)(ks_arr, keys, self.x)
+            with tracer.span("score", track=self._dispatch_track(), kind=self.score,
+                             batch=len(padded)):
+                out = [float(s) for s in scores[:n_real]]
+            self._emit_lane_spans(tracer, t0_us, padded, n_real, kind="kmeans")
+            return out
+        with tracer.span("fit", track=self._dispatch_track(), kind="kmeans",
                          ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad):
             res = kmeans_batched(self.x, padded, self.key, k_pad=k_pad, max_iters=self.max_iters)
         ks_arr = jnp.asarray(padded)
@@ -179,7 +335,8 @@ class KMeansBatchPlane(_BatchPlaneBase):
         # x stays unbatched (n, d): the jnp scorer tiers broadcast it against
         # the batched labels so the point-pairwise work is done once, while
         # the Pallas tier streams per-lane tiles that never hit HBM.
-        with tracer.span("score", track="device:0", kind=self.score, batch=len(padded)):
+        with tracer.span("score", track=self._dispatch_track(), kind=self.score,
+                         batch=len(padded)):
             if self.score == "davies_bouldin":
                 scores = davies_bouldin_score_masked(
                     self.x, res.labels, k_pad, cluster_mask=cluster_mask

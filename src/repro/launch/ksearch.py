@@ -14,6 +14,14 @@ threads — the control plane is identical to the 512-chip layout; swap
 
   PYTHONPATH=src python -m repro.launch.ksearch --k-max 16 --k-true 5 \
       --resources 4 --early-stop
+
+``--executor sharded`` replaces threads with the mesh-sharded wavefront
+plane: one jit'd dispatch fits a whole frontier, k-lanes split over the
+mesh's ``lane`` axis and (``--data-shards > 1``) V's rows over ``data``.
+Validate on CPU with 8 virtual devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.ksearch --executor sharded --k-max 32
 """
 from __future__ import annotations
 
@@ -31,12 +39,14 @@ from repro.core import (
     SearchSpace,
     ThreadPoolScheduler,
     WavefrontScheduler,
+    enable_persistent_cache,
     make_space,
 )
 from repro.factorization.distributed import distributed_nmf, make_local_mesh
 from repro.factorization.nmfk import nmfk_score
 from repro.factorization.planes import NMFkBatchPlane
 from repro.factorization.synthetic import nmf_data
+from repro.launch.mesh import SubmeshPool, make_wave_mesh
 from repro.obs import NULL_TRACER, Metrics, Tracer, use_metrics, use_tracer
 
 
@@ -69,11 +79,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--journal", default=None, help="dir for FileCoordinator (restartable)")
     ap.add_argument("--distributed-fit", action="store_true",
                     help="run each NMF fit via shard_map over the resource's sub-mesh")
-    ap.add_argument("--executor", default="threads", choices=["threads", "batched"],
+    ap.add_argument("--executor", default="threads",
+                    choices=["threads", "batched", "sharded"],
                     help="threads: one fit per k per worker; batched: wavefront "
-                    "frontiers as one padded vmapped NMFk fit per wave")
+                    "frontiers as one padded vmapped NMFk fit per wave; sharded: "
+                    "wavefront frontiers shard_map'd over a (lane, data) mesh — "
+                    "parallel-over-k across lanes, distributed-within-k when "
+                    "--data-shards > 1")
     ap.add_argument("--max-wave", type=int, default=None,
-                    help="cap ks per batched dispatch (batched executor only)")
+                    help="cap ks per batched dispatch (batched/sharded executors)")
+    ap.add_argument("--lanes", type=int, default=None,
+                    help="lane-axis size of the sharded mesh (default: all "
+                    "visible devices / --data-shards)")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="data-axis size of the sharded mesh: each lane's NMF "
+                    "fit row-shards V over this many devices (pyDNMFk mode)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jit compile cache dir: the handful of "
+                    "bucketed (batch, k_pad) shapes compile once across runs")
     ap.add_argument("--trace", default=None, metavar="OUT",
                     help="write a search trace: Chrome-trace/Perfetto JSON "
                     "(open at ui.perfetto.dev), or JSONL if OUT ends in .jsonl")
@@ -83,17 +106,22 @@ def main(argv=None) -> dict:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
+    if args.compile_cache:
+        # before the first jit dispatch: earlier compiles are not retro-cached
+        enable_persistent_cache(args.compile_cache)
+
     key = jax.random.PRNGKey(0)
     v, _, _ = nmf_data(key, n=args.n, m=args.m, k_true=args.k_true)
-    submeshes = make_submeshes(args.resources)
+    pool = SubmeshPool(make_submeshes(args.resources))
 
     def evaluate(k: int, should_abort=None) -> float:
         sub = jax.random.fold_in(key, k)
         if args.distributed_fit:
-            # paper's distributed mode: the fit itself is sharded; scoring
-            # still ensembles perturbations (cheap at this scale).
-            mesh = submeshes[k % len(submeshes)]
-            res = distributed_nmf(v, int(k), sub, mesh, iters=args.nmf_iters)
+            # paper's distributed mode: the fit itself is sharded over this
+            # *worker's* leased sub-mesh (a worker-identity resource — keying
+            # by k collides concurrent workers onto one device group);
+            # scoring still ensembles perturbations (cheap at this scale).
+            res = distributed_nmf(v, int(k), sub, pool.acquire(), iters=args.nmf_iters)
             del res
         sc = nmfk_score(v, int(k), sub, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters)
         return float(sc.min_silhouette)
@@ -117,7 +145,7 @@ def main(argv=None) -> dict:
 
 
 def _run_search(args, ap, space, v, key, evaluate):
-    if args.executor == "batched":
+    if args.executor in ("batched", "sharded"):
         if not args.quiet:
             ignored = (
                 ("--journal", args.journal),
@@ -127,15 +155,22 @@ def _run_search(args, ap, space, v, key, evaluate):
             )
             for flag, used in ignored:
                 if used:
-                    print(f"note: {flag} is ignored by the batched executor")
+                    print(f"note: {flag} is ignored by the {args.executor} executor")
+        mesh = None
+        if args.executor == "sharded":
+            mesh = make_wave_mesh(lanes=args.lanes, data=args.data_shards)
         plane = NMFkBatchPlane(
-            v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters, k_pad=args.k_max
+            v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters,
+            k_pad=args.k_max, mesh=mesh,
         )
         sched = WavefrontScheduler(space, max_wave=args.max_wave)
         t0 = time.time()
         result = sched.run(plane)
         dt = time.time() - t0
         extra = {"waves": sched.n_dispatches, "compiled_shapes": sorted(plane.shapes_compiled)}
+        if mesh is not None:
+            extra["mesh"] = {"lanes": plane.lane_count, "data": plane.data_count}
+            extra["lane_utilization_last"] = plane.last_lane_utilization
     else:
         visited: set[int] = set()
         if args.journal:

@@ -4,12 +4,19 @@ Single pod: (data=16, model=16) — 256 chips (TPU v5e pod).
 Multi-pod:  (pod=2, data=16, model=16) — 512 chips; batch shards over
 (pod, data), parameters/experts/heads over model, FSDP over data.
 
+K-search meshes: ``make_wave_mesh`` carves the visible devices into the
+2-D ``(lane, data)`` mesh the sharded wavefront planes consume, and
+``SubmeshPool`` leases per-worker submeshes to the threaded distributed-fit
+executor (each worker keeps ONE submesh for its lifetime — submeshes are
+a worker-identity resource, not a function of the k being evaluated).
+
 Functions (not module constants) so importing never touches jax device
 state — the dry-run sets XLA_FLAGS before first jax init.
 """
 from __future__ import annotations
 
-from typing import Any
+import threading
+from typing import Any, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding
@@ -24,6 +31,69 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_wave_mesh(
+    lanes: int | None = None, data: int = 1, devices: Sequence[Any] | None = None
+) -> Mesh:
+    """2-D ``(lane, data)`` mesh for the sharded wavefront planes.
+
+    ``lanes`` parallel k-fits, each distributed over ``data`` devices
+    (pyDNMFk psum structure) — lanes × data devices total. With
+    ``lanes=None`` every remaining device becomes a lane
+    (``len(devices) // data``). Raises if the device count doesn't factor.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if data < 1:
+        raise ValueError(f"data must be >= 1, got {data}")
+    if lanes is None:
+        if len(devs) % data:
+            raise ValueError(f"{len(devs)} devices do not split into data={data} shards")
+        lanes = len(devs) // data
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    need = lanes * data
+    if need > len(devs):
+        raise ValueError(f"mesh ({lanes} lanes x {data} data) needs {need} devices, "
+                         f"have {len(devs)}")
+    return jax.make_mesh((lanes, data), ("lane", "data"), devices=devs[:need])
+
+
+class SubmeshPool:
+    """Lease one submesh per *worker* for the threaded distributed-fit path.
+
+    The executor's workers are threads that each run one k-evaluation at a
+    time on a dedicated device group; the evaluate closure only sees the k,
+    so the pool keys the lease on ``threading.get_ident()``. First touch
+    assigns the next free submesh round-robin; every later call from the
+    same worker returns the same submesh. (Keying on k instead — e.g.
+    ``submeshes[k % n]`` — lands two concurrent workers on the same device
+    group whenever their ks collide mod n, serializing the fits the
+    submeshes exist to parallelize.)
+    """
+
+    def __init__(self, submeshes: Sequence[Mesh]):
+        if not submeshes:
+            raise ValueError("SubmeshPool needs at least one submesh")
+        self.submeshes = list(submeshes)
+        self._lock = threading.Lock()
+        self._assign: dict[int, Mesh] = {}
+
+    def acquire(self) -> Mesh:
+        """The calling worker's submesh (assigned on first touch)."""
+        ident = threading.get_ident()
+        with self._lock:
+            mesh = self._assign.get(ident)
+            if mesh is None:
+                mesh = self.submeshes[len(self._assign) % len(self.submeshes)]
+                self._assign[ident] = mesh
+            return mesh
+
+    def assignments(self) -> dict[int, int]:
+        """thread ident -> submesh index (introspection for tests/traces)."""
+        with self._lock:
+            index = {id(m): i for i, m in enumerate(self.submeshes)}
+            return {t: index[id(m)] for t, m in self._assign.items()}
 
 
 def make_axes(mesh: Mesh, global_batch: int | None = None) -> Axes:

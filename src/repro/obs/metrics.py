@@ -16,8 +16,10 @@ Conventional names used across the instrumented layers:
   counters   ks_visited, ks_skipped, ks_aborted, ks_journaled,
              compile_count, publish_count, bound_merges, lock_broken,
              speculations, failures, joins
-  gauges     ks_candidates, heartbeat_age_max, lo_bound, hi_bound
-  histograms wave_size, fit_seconds, publish_latency_s, lock_wait_s
+  gauges     ks_candidates, heartbeat_age_max, lo_bound, hi_bound,
+             lane_utilization (real / dispatched lanes of the last wave)
+  histograms wave_size, fit_seconds, publish_latency_s, lock_wait_s,
+             lane_utilization (per-dispatch distribution)
 """
 from __future__ import annotations
 

@@ -97,6 +97,17 @@ class NullTracer:
     def event(self, name: str, track: str | None = None, **attrs: Any) -> None:
         pass
 
+    def add_span(
+        self, name: str, ts_us: float, dur_us: float, track: str | None = None, **attrs: Any
+    ) -> None:
+        pass
+
+    def add_event(self, name: str, ts_us: float, track: str | None = None, **attrs: Any) -> None:
+        pass
+
+    def now_us(self) -> float:
+        return 0.0
+
     def events(self) -> list[dict]:
         return []
 
@@ -124,6 +135,12 @@ class Tracer:
     # -- recording ------------------------------------------------------------
     def _now_us(self) -> float:
         return (self._clock() - self._t0) * 1e6
+
+    def now_us(self) -> float:
+        """Current tracer-relative timestamp (µs) — pair with ``add_span``
+        to inject retroactive spans (e.g. per-device lanes of a dispatch
+        whose wall interval is only known after the batch completes)."""
+        return self._now_us()
 
     def _complete(self, span: Span) -> None:
         end = self._now_us()

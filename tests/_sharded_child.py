@@ -1,0 +1,99 @@
+"""Child process for tests/test_sharded_plane.py — needs 8 XLA devices.
+
+``--xla_force_host_platform_device_count`` must be set before jax
+initializes, and the parent pytest process has already initialized a
+1-device runtime, so the device-heavy sharded-plane assertions run here:
+the parent re-execs this script with the flag in XLA_FLAGS and checks the
+exit status. Every assertion failure prints before a non-zero exit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def main() -> None:
+    import jax
+
+    assert jax.device_count() == 8, f"expected 8 forced devices, got {jax.device_count()}"
+
+    import jax.numpy as jnp
+
+    from repro.core import WavefrontScheduler, make_space
+    from repro.factorization.nmfk import nmfk_score
+    from repro.factorization.planes import KMeansBatchPlane, NMFkBatchPlane
+
+    key = jax.random.PRNGKey(0)
+    kv = jax.random.fold_in(key, 99)
+    w = jax.random.uniform(jax.random.fold_in(kv, 1), (48, 4))
+    h = jax.random.uniform(jax.random.fold_in(kv, 2), (4, 36))
+    v = w @ h
+
+    mesh = jax.make_mesh((8, 1), ("lane", "data"), devices=jax.devices())
+    mesh42 = jax.make_mesh((4, 2), ("lane", "data"), devices=jax.devices())
+    fit = dict(n_perturbs=3, nmf_iters=40, k_pad=10)
+
+    batched = NMFkBatchPlane(v, key, **fit)
+    sharded = NMFkBatchPlane(v, key, mesh=mesh, **fit)
+    datash = NMFkBatchPlane(v, key, mesh=mesh42, **fit)
+
+    # full wave (multiple of lane count): lane-sharded is score-for-score
+    # the batched plane; data-sharded differs only by psum reduction order
+    ks = list(range(2, 10))
+    ref = batched.evaluate_batch(ks)
+    np.testing.assert_allclose(sharded.evaluate_batch(ks), ref, atol=1e-5)
+    np.testing.assert_allclose(datash.evaluate_batch(ks), ref, atol=2e-3)
+
+    # non-multiple-of-lane wave and singleton: padding keeps parity and
+    # reuses the (8, k_pad) bucket instead of minting new shapes
+    np.testing.assert_allclose(
+        sharded.evaluate_batch([2, 3, 4, 5, 6]),
+        batched.evaluate_batch([2, 3, 4, 5, 6]),
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        sharded.evaluate_one(7), batched.evaluate_one(7), atol=1e-5
+    )
+    assert sharded.shapes_compiled == {(8, 10)}, sharded.shapes_compiled
+
+    # scalar oracle: at k == k_pad the padded fit is the unpadded fit
+    oracle = NMFkBatchPlane(v, key, n_perturbs=3, nmf_iters=40, k_pad=8, mesh=mesh)
+    sc = nmfk_score(
+        v, 8, jax.random.fold_in(key, 8), n_perturbs=3, nmf_iters=40
+    )
+    np.testing.assert_allclose(
+        oracle.evaluate_batch([8])[0], float(sc.min_silhouette), atol=1e-5
+    )
+
+    # kmeans: lane-sharded matches batched; data axis > 1 is rejected
+    xk = jax.random.normal(jax.random.fold_in(key, 5), (64, 3)) + 3.0 * jax.random.randint(
+        jax.random.fold_in(key, 6), (64, 1), 0, 4
+    ).astype(jnp.float32)
+    km_b = KMeansBatchPlane(xk, key, k_pad=8, max_iters=25)
+    km_s = KMeansBatchPlane(xk, key, k_pad=8, max_iters=25, mesh=mesh)
+    np.testing.assert_allclose(
+        km_s.evaluate_batch([2, 3, 4, 5, 6, 7]),
+        km_b.evaluate_batch([2, 3, 4, 5, 6, 7]),
+        atol=1e-5,
+    )
+    try:
+        KMeansBatchPlane(xk, key, k_pad=8, mesh=mesh42)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("KMeansBatchPlane accepted a data-sharded mesh")
+
+    # end-to-end: the wavefront search lands on the same k through either
+    # executor, and bucketing holds the sharded search to <= 4 jit shapes
+    space = make_space((2, 16), 0.7)
+    p_b = NMFkBatchPlane(v, key, n_perturbs=2, nmf_iters=30, k_pad=16)
+    p_s = NMFkBatchPlane(v, key, n_perturbs=2, nmf_iters=30, k_pad=16, mesh=mesh)
+    r_b = WavefrontScheduler(space).run(p_b)
+    r_s = WavefrontScheduler(space).run(p_s)
+    assert r_s.k_optimal == r_b.k_optimal, (r_s.k_optimal, r_b.k_optimal)
+    assert len(p_s.shapes_compiled) <= 4, p_s.shapes_compiled
+
+    print("sharded child OK")
+
+
+if __name__ == "__main__":
+    main()
