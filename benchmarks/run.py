@@ -11,6 +11,7 @@ Prints ``name,value,derived`` CSV rows:
   bench_scoring     — streaming vs dense silhouette: bytes moved + wall-clock
   bench_roofline    — §Roofline terms from the dry-run artifacts
   bench_sharded     — mesh-sharded wavefront: wave-throughput vs batched
+  bench_collectives — pipelined ring collectives: sweep throughput + overlap
 
 ``--json out.json`` additionally writes the structured results as
 ``{bench: {metric: value}}`` — the machine-readable form CI archives per
@@ -89,7 +90,7 @@ def _direction(metric: str) -> int:
     not gated — a wrong guess here would turn an improvement into a CI
     failure.
     """
-    if any(t in metric for t in ("speedup", "scaling", "match")):
+    if any(t in metric for t in ("speedup", "scaling", "match", "overlap_fraction")):
         return 1
     if any(t in metric for t in ("overhead", "seconds", "rel_err", "shapes_compiled")):
         return -1
@@ -142,6 +143,7 @@ def main() -> None:
 
     from . import (
         bench_chunking,
+        bench_collectives,
         bench_distributed,
         bench_kernels,
         bench_kmeans_rmse,
@@ -162,6 +164,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "obs_overhead": bench_obs_overhead.run,
         "sharded": bench_sharded.run,
+        "collectives": bench_collectives.run,
     }
     if args.only:
         keep = set(args.only.split(","))

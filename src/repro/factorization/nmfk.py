@@ -216,6 +216,7 @@ def _nmfk_score_masked_dist(
     nmf_iters: int = 150,
     epsilon: float = 0.015,
     use_kernel: bool = False,
+    comm: str = "sync",
 ) -> NMFkScore:
     """``_nmfk_score_masked`` with the fit row-distributed over ``data_axis``.
 
@@ -223,8 +224,10 @@ def _nmfk_score_masked_dist(
     perturbation draws the *full* (n, m) noise matrix from the replicated
     key and slices its rows, so the fit consumes exactly the draws the
     single-device path consumes; the NMF itself is ``_dnmf_masked_local``
-    (pyDNMFk psum structure). W is all-gathered (n×k_pad per perturbation —
-    tiny next to V) and the pooled-column scoring runs replicated.
+    (pyDNMFk psum structure; ``comm="pipelined"`` overlaps its Gram
+    reductions with the local W-update). W is all-gathered (n×k_pad per
+    perturbation — tiny next to V) and the pooled-column scoring runs
+    replicated.
     """
     from .distributed import _dnmf_masked_local
 
@@ -240,7 +243,8 @@ def _nmfk_score_masked_dist(
         )
         vp_l = v_l * jax.lax.dynamic_slice_in_dim(noise, idx * n_l, n_l, axis=0)
         return _dnmf_masked_local(
-            vp_l, k_eff, fk, k_pad, iters=nmf_iters, axis=data_axis, n_total=n_total
+            vp_l, k_eff, fk, k_pad, iters=nmf_iters, axis=data_axis,
+            n_total=n_total, comm=comm,
         )
 
     w_all_l, errs = jax.vmap(fit_one)(pkeys, fkeys)  # (p, n_l, k_pad), (p,)
@@ -290,6 +294,7 @@ def _sharded_score_fn(
     use_kernel: bool,
     lane_axis: str,
     data_axis: str,
+    comm: str = "sync",
 ):
     """Build (once per config) the jitted shard_map'd wave scorer.
 
@@ -322,7 +327,7 @@ def _sharded_score_fn(
                 lambda k_eff, sub: _nmfk_score_masked_dist(
                     v_l, k_eff, sub, k_pad, data_axis, n_total,
                     n_perturbs=n_perturbs, nmf_iters=nmf_iters,
-                    epsilon=epsilon, use_kernel=use_kernel,
+                    epsilon=epsilon, use_kernel=use_kernel, comm=comm,
                 )
             )(ks_l, keys_l)
 
@@ -346,6 +351,7 @@ def nmfk_score_sharded(
     use_kernel: bool = False,
     lane_axis: str = "lane",
     data_axis: str = "data",
+    comm: str = "sync",
 ) -> NMFkScore:
     """``nmfk_score_batched`` sharded over a 2-D ``Mesh((lane, data))``.
 
@@ -356,12 +362,19 @@ def nmfk_score_sharded(
     distributed-within-k composition in one jit'd dispatch. The key
     schedule is lane i = ``fold_in(key, ks[i])``, identical to the batched
     and scalar paths, so scores agree with ``nmfk_score_batched`` (exactly
-    for lane-only meshes; to psum reduction order under data sharding).
+    for lane-only meshes; to psum reduction order under data sharding;
+    ``comm="pipelined"`` additionally runs the one-sweep-stale overlapped
+    Gram schedule inside each data-sharded fit — same ``k_optimal``,
+    scores within the conformance suite's documented tolerance).
 
     Requires len(ks) divisible by the lane count (planes guarantee this by
     bucketing the batch to a lane multiple) and, when data > 1, v's row
     count divisible by the data-axis size.
     """
+    from .distributed import COMM_MODES
+
+    if comm not in COMM_MODES:
+        raise ValueError(f"comm must be one of {COMM_MODES}, got {comm!r}")
     ks_arr, keys, k_pad = batched_lanes(ks, key, k_pad)
     shape = dict(mesh.shape)
     lanes = shape[lane_axis]
@@ -376,7 +389,7 @@ def nmfk_score_sharded(
         )
     fn = _sharded_score_fn(
         mesh, int(k_pad), int(n_perturbs), int(nmf_iters), float(epsilon),
-        bool(use_kernel), lane_axis, data_axis,
+        bool(use_kernel), lane_axis, data_axis, str(comm),
     )
     return fn(ks_arr, keys, v)
 

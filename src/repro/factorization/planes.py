@@ -67,10 +67,16 @@ class _BatchPlaneBase:
         lane_axis: str = "lane",
         data_axis: str = "data",
         bucket_min: int | None = None,
+        comm: str = "sync",
     ):
+        from .distributed import COMM_MODES
+
+        if comm not in COMM_MODES:
+            raise ValueError(f"comm must be one of {COMM_MODES}, got {comm!r}")
         self.k_pad = k_pad
         self.pad_batch = pad_batch
         self.mesh = mesh
+        self.comm = comm
         self.lane_axis = lane_axis
         self.data_axis = data_axis
         shape = dict(mesh.shape) if mesh is not None else {}
@@ -173,6 +179,10 @@ class NMFkBatchPlane(_BatchPlaneBase):
     ``lane`` axis; if the mesh's ``data`` axis is non-trivial, V's rows are
     additionally sharded and each fit runs the distributed psum structure
     (requires ``v.shape[0]`` divisible by the data-axis size).
+    ``comm="pipelined"`` switches those data-sharded fits to the
+    decomposed-psum schedule that overlaps the Gram reductions with the
+    local W-update; each such dispatch publishes an ``overlap_fraction``
+    gauge and (when tracing) modeled per-sweep comm/compute spans.
     """
 
     def __init__(
@@ -190,8 +200,9 @@ class NMFkBatchPlane(_BatchPlaneBase):
         lane_axis: str = "lane",
         data_axis: str = "data",
         bucket_min: int | None = None,
+        comm: str = "sync",
     ):
-        super().__init__(k_pad, pad_batch, mesh, lane_axis, data_axis, bucket_min)
+        super().__init__(k_pad, pad_batch, mesh, lane_axis, data_axis, bucket_min, comm)
         if statistic not in ("min", "mean"):
             raise ValueError(f"statistic must be 'min' or 'mean', got {statistic!r}")
         if self.data_count > 1 and v.shape[0] % self.data_count:
@@ -212,13 +223,50 @@ class NMFkBatchPlane(_BatchPlaneBase):
                 self.v, padded, self.key, self.mesh,
                 k_pad=k_pad, n_perturbs=self.n_perturbs, nmf_iters=self.nmf_iters,
                 epsilon=self.epsilon, use_kernel=self.use_kernel,
-                lane_axis=self.lane_axis, data_axis=self.data_axis,
+                lane_axis=self.lane_axis, data_axis=self.data_axis, comm=self.comm,
             )
         return nmfk_score_batched(
             self.v, padded, self.key,
             k_pad=k_pad, n_perturbs=self.n_perturbs, nmf_iters=self.nmf_iters,
             epsilon=self.epsilon, use_kernel=self.use_kernel,
         )
+
+    _MAX_TRACE_SWEEPS = 16  # per-sweep modeled spans emitted per dispatch
+
+    def _emit_overlap_telemetry(self, tracer, t0_us: float, k_pad: int) -> None:
+        """Publish the pipelined schedule's comm/compute overlap.
+
+        The sweeps live inside one jit'd fori_loop, so per-sweep timing is
+        not host-observable; spans are *modeled* — the measured dispatch
+        wall time apportioned uniformly over sweeps, comm span lengths from
+        ``overlap_model`` — and marked as such. The ``overlap_fraction``
+        gauge (share of per-sweep comm hidden behind the local W-update) is
+        always published; spans only when tracing is on.
+        """
+        if self.comm != "pipelined" or self.data_count <= 1:
+            return
+        from .distributed import overlap_model
+
+        model = overlap_model(self.v.shape[0], self.v.shape[1], k_pad, self.data_count)
+        get_metrics().set_gauge("overlap_fraction", model["overlap_fraction"])
+        get_metrics().observe("overlap_fraction_hist", model["overlap_fraction"])
+        if not tracer.enabled:
+            return
+        dur = max(tracer.now_us() - t0_us, 0.0)
+        sweeps = min(self.nmf_iters, self._MAX_TRACE_SWEEPS)
+        per = dur / max(self.nmf_iters, 1)
+        comm_dur = per * model["comm_fraction"]
+        for i in range(sweeps):
+            t = t0_us + i * per
+            tracer.add_span(
+                "sweep_compute", t, per, track="data:compute",
+                sweep=i, modeled=True, data_shards=self.data_count,
+            )
+            tracer.add_span(
+                "gram_ring", t, comm_dur, track="data:comm",
+                sweep=i, modeled=True,
+                overlap_fraction=model["overlap_fraction"],
+            )
 
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         tracer = get_tracer()
@@ -227,12 +275,14 @@ class NMFkBatchPlane(_BatchPlaneBase):
         # "fit" brackets the fused fit+score dispatch (one jit'd ensemble);
         # "score" brackets device->host sync of the silhouette statistics.
         with tracer.span("fit", track=self._dispatch_track(), kind="nmfk",
-                         ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad):
+                         ks=[int(k) for k in ks], batch=len(padded), k_pad=k_pad,
+                         comm=self.comm):
             sc = self._score_wave(padded, k_pad)
             scores = sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette
         with tracer.span("score", track=self._dispatch_track(), kind="nmfk", batch=len(padded)):
             out = [float(s) for s in scores[:n_real]]
         self._emit_lane_spans(tracer, t0_us, padded, n_real, kind="nmfk")
+        self._emit_overlap_telemetry(tracer, t0_us, k_pad)
         return out
 
 
@@ -246,6 +296,9 @@ class KMeansBatchPlane(_BatchPlaneBase):
     ``mesh=`` shards the wave's k axis over the mesh's ``lane`` axis; the
     data matrix stays replicated (K-Means assignment has no pyDNMFk-style
     Gram psum structure to reuse — a data axis of size > 1 is rejected).
+    ``comm`` is accepted for executor-matrix uniformity but is a no-op:
+    a lane-only dispatch has no cross-shard collectives to pipeline, so
+    ``"pipelined"`` is bit-identical to ``"sync"`` here.
     """
 
     def __init__(
@@ -261,8 +314,9 @@ class KMeansBatchPlane(_BatchPlaneBase):
         lane_axis: str = "lane",
         data_axis: str = "data",
         bucket_min: int | None = None,
+        comm: str = "sync",
     ):
-        super().__init__(k_pad, pad_batch, mesh, lane_axis, data_axis, bucket_min)
+        super().__init__(k_pad, pad_batch, mesh, lane_axis, data_axis, bucket_min, comm)
         if score not in ("davies_bouldin", "silhouette"):
             raise ValueError(f"score must be 'davies_bouldin' or 'silhouette', got {score!r}")
         if self.data_count > 1:

@@ -94,6 +94,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--data-shards", type=int, default=1,
                     help="data-axis size of the sharded mesh: each lane's NMF "
                     "fit row-shards V over this many devices (pyDNMFk mode)")
+    ap.add_argument("--comm", default="sync", choices=["sync", "pipelined"],
+                    help="collective schedule of the data-sharded fits: sync "
+                    "blocks each MU sweep on the Gram all-reduces; pipelined "
+                    "decomposes them into psum_scatter + ring all-gather and "
+                    "overlaps the in-flight reduction with the local W-update "
+                    "(one-sweep-stale H, final sync sweep). Only meaningful "
+                    "with --executor sharded and --data-shards > 1")
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent jit compile cache dir: the handful of "
                     "bucketed (batch, k_pad) shapes compile once across runs")
@@ -159,10 +166,15 @@ def _run_search(args, ap, space, v, key, evaluate):
         mesh = None
         if args.executor == "sharded":
             mesh = make_wave_mesh(lanes=args.lanes, data=args.data_shards)
+        elif args.comm != "sync" and not args.quiet:
+            print(f"note: --comm is ignored by the {args.executor} executor")
         plane = NMFkBatchPlane(
             v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters,
-            k_pad=args.k_max, mesh=mesh,
+            k_pad=args.k_max, mesh=mesh, comm=args.comm,
         )
+        if (mesh is not None and args.comm == "pipelined"
+                and plane.data_count <= 1 and not args.quiet):
+            print("note: --comm pipelined is a no-op without --data-shards > 1")
         sched = WavefrontScheduler(space, max_wave=args.max_wave)
         t0 = time.time()
         result = sched.run(plane)
@@ -171,6 +183,11 @@ def _run_search(args, ap, space, v, key, evaluate):
         if mesh is not None:
             extra["mesh"] = {"lanes": plane.lane_count, "data": plane.data_count}
             extra["lane_utilization_last"] = plane.last_lane_utilization
+            extra["comm"] = args.comm
+            if args.comm == "pipelined" and plane.data_count > 1:
+                from repro.obs import get_metrics
+
+                extra["overlap_fraction"] = get_metrics().gauge("overlap_fraction")
     else:
         visited: set[int] = set()
         if args.journal:

@@ -1,0 +1,52 @@
+"""Cross-executor conformance: scalar / batched / sharded / pipelined.
+
+One subprocess child per forced device count (the
+``--xla_force_host_platform_device_count`` flag must precede jax init, and
+this pytest process already holds a 1-device runtime). The child —
+``tests/_conformance_child.py`` — runs the full executor × model matrix
+(NMFk + K-Means) on fixed seeds and asserts identical ``k_optimal`` plus
+score agreement within the tolerances documented in its module docstring.
+
+Device counts 1 and 4 run in tier-1; 2 and 8 carry ``slow`` (deselected by
+the default ``-m "not slow"`` addopts, exercised by the CI slow job) so
+the default suite pays for two childs, not four.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = pytest.mark.multidevice
+
+
+@pytest.mark.parametrize(
+    "devices",
+    [
+        1,
+        pytest.param(2, marks=pytest.mark.slow),
+        4,
+        pytest.param(8, marks=pytest.mark.slow),
+    ],
+)
+def test_cross_executor_conformance(devices):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p
+    )
+    proc = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "tests", "_conformance_child.py"),
+            str(devices),
+        ],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900,
+    )
+    assert proc.returncode == 0, f"child failed:\n{proc.stdout}\n{proc.stderr}"
+    assert f"conformance child OK devices={devices}" in proc.stdout
