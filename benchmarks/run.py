@@ -12,6 +12,7 @@ Prints ``name,value,derived`` CSV rows:
   bench_roofline    — §Roofline terms from the dry-run artifacts
   bench_sharded     — mesh-sharded wavefront: wave-throughput vs batched
   bench_collectives — pipelined ring collectives: sweep throughput + overlap
+  bench_elastic     — elastic wavefront: sweeps saved vs fixed-iteration
 
 ``--json out.json`` additionally writes the structured results as
 ``{bench: {metric: value}}`` — the machine-readable form CI archives per
@@ -145,6 +146,7 @@ def main() -> None:
         bench_chunking,
         bench_collectives,
         bench_distributed,
+        bench_elastic,
         bench_kernels,
         bench_kmeans_rmse,
         bench_obs_overhead,
@@ -165,6 +167,7 @@ def main() -> None:
         "obs_overhead": bench_obs_overhead.run,
         "sharded": bench_sharded.run,
         "collectives": bench_collectives.run,
+        "elastic": bench_elastic.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,6 +1,8 @@
 """Binary Bleed core: the paper's contribution as a composable library."""
 from .api import (  # noqa: F401
+    ElasticWavefrontScheduler,
     EvalPlane,
+    LaneRefillPolicy,
     Mode,
     ScalarEvalPlane,
     ScheduleTrace,

@@ -25,8 +25,19 @@ from __future__ import annotations
 from typing import Callable, Sequence
 
 from .bleed import binary_bleed_recursive, binary_bleed_worklist, standard_search
-from .evalplane import EvalPlane, ScalarEvalPlane, WavefrontScheduler, as_eval_plane
-from .scheduler import ScheduleTrace, SimulatedScheduler, ThreadPoolScheduler
+from .evalplane import (
+    ElasticWavefrontScheduler,
+    EvalPlane,
+    ScalarEvalPlane,
+    WavefrontScheduler,
+    as_eval_plane,
+)
+from .scheduler import (
+    LaneRefillPolicy,
+    ScheduleTrace,
+    SimulatedScheduler,
+    ThreadPoolScheduler,
+)
 from .search_space import Mode, SearchResult, SearchSpace
 from .traversal import Order
 
@@ -75,10 +86,18 @@ def binary_bleed_search(
       may be a scalar callable (batched trivially) or any ``EvalPlane``;
       ``max_wave`` caps the ks per dispatch. ``num_resources`` is ignored —
       parallelism comes from the batch axis, not threads.
+    * ``"elastic"`` — continuous batching over fit-chunks: ``evaluate``
+      must be an elastic plane (``submit``/``cancel``/``tick`` — e.g.
+      ``repro.factorization.planes.NMFkElasticPlane``). Lanes retire on
+      per-fit convergence, freed slots refill from the pre-order worklist
+      (``order`` is taken from the plane-side ``LaneRefillPolicy``), and
+      prunes evict in-flight ks mid-fit.
     """
     space = make_space(k_range, select_threshold, stop_threshold, mode)
     if executor == "batched":
         return WavefrontScheduler(space, max_wave=max_wave).run(evaluate)
+    if executor == "elastic":
+        return ElasticWavefrontScheduler(space, refill=LaneRefillPolicy(order=order)).run(evaluate)
     if num_resources <= 1:
         return binary_bleed_worklist(space, evaluate, order=order)
     if executor == "threads":
@@ -109,6 +128,8 @@ __all__ = [
     "EvalPlane",
     "ScalarEvalPlane",
     "WavefrontScheduler",
+    "ElasticWavefrontScheduler",
+    "LaneRefillPolicy",
     "as_eval_plane",
     "SimulatedScheduler",
     "ThreadPoolScheduler",

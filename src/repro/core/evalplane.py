@@ -84,7 +84,15 @@ class _BatchOnlyAdapter:
         self.plane = plane
 
     def evaluate_one(self, k: int, should_abort: AbortFn | None = None) -> float:
-        del should_abort  # batched fits have no chunk boundary to poll
+        # A black-box batch plane exposes no chunk boundary to poll
+        # mid-fit, but the §III-D callback must not be silently dropped:
+        # poll it before dispatching so a k pruned while queued never pays
+        # for its fit at all (NaN is a void score — no threshold selects
+        # it, so prune bounds and k_optimal are untouched). Planes with a
+        # resumable fit implement ``evaluate_one`` themselves and poll at
+        # every chunk boundary instead.
+        if should_abort is not None and should_abort():
+            return float("nan")
         return float(self.plane.evaluate_batch([k])[0])
 
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
@@ -243,10 +251,106 @@ class WavefrontScheduler:
         return len(self.waves)
 
 
+class ElasticWavefrontScheduler:
+    """Continuous-batching Binary Bleed: a stream of fit-chunks, not waves.
+
+    Drives an *elastic plane* (``submit(k)`` / ``cancel(k)`` / ``tick()`` /
+    ``idle`` / ``inflight_ks()`` — e.g. ``repro.factorization.planes.
+    NMFkElasticPlane``) instead of ``evaluate_batch``. The unit of
+    scheduling is one chunk of MU sweeps across every occupied lane; the
+    driver's loop between chunks is where Binary Bleed happens:
+
+      1. **admit** — drain ks from the pre-order traversal worklist into
+         the plane's lane queue while the refill policy has room, skipping
+         ks the current bounds already prune (the candidate stream of the
+         wavefront executor is exactly this worklist — descent happens
+         regardless of scores, pruning only filters — so elastic refill
+         preserves Alg 1/3/4 visit semantics);
+      2. **tick** — one chunk dispatch; converged/budget-exhausted lanes
+         retire inside the plane and completed ks come back scored;
+      3. **record** — fold scores into ``BleedState``, updating bounds;
+      4. **evict** — cancel in-flight ks the new bounds prune (§III-D
+         mid-fit abort, charged to ``ks_aborted`` / ``sweeps_saved``).
+
+    Like the wave executor, concurrency makes visits a superset of the
+    serial schedule but a subset of the pre-order worklist; pruning
+    soundness keeps ``k_optimal`` identical for threshold-separable score
+    shapes. Every k ends either recorded (scored) or skipped (pruned at
+    admission or evicted), so visited + skipped == |K|.
+    """
+
+    def __init__(self, space: SearchSpace, refill=None, tracer=None, metrics=None):
+        self.space = space
+        self.refill = refill
+        self._tracer = tracer
+        self._metrics = metrics
+        self.n_ticks = 0
+
+    def run(self, plane, state=None) -> SearchResult:
+        from .bleed import BleedState  # lazy: bleed sits above this module
+        from .scheduler import LaneRefillPolicy
+
+        tracer = self._tracer if self._tracer is not None else get_tracer()
+        metrics = self._metrics if self._metrics is not None else get_metrics()
+        policy = self.refill if self.refill is not None else LaneRefillPolicy()
+        space = self.space
+        state = state if state is not None else BleedState(space, tracer=tracer, metrics=metrics)
+        worklist = list(policy.worklist(space.ks))
+        pos = 0
+        self.n_ticks = 0
+
+        while True:
+            # 1. admit: refill the lane queue from the live worklist prefix
+            while pos < len(worklist) and policy.admit(plane):
+                k = worklist[pos]
+                pos += 1
+                if state.should_visit(k):
+                    plane.submit(k)
+                else:
+                    state.skip(k)
+            if plane.idle:
+                if pos >= len(worklist):
+                    break
+                # a refill policy must not starve an idle plane: force one
+                # admission so the loop always progresses
+                k = worklist[pos]
+                pos += 1
+                if state.should_visit(k):
+                    plane.submit(k)
+                else:
+                    state.skip(k)
+                continue
+            # 2. tick: one chunk across all occupied lanes
+            with tracer.span("tick", track="wavefront", tick=self.n_ticks):
+                finished = plane.tick()
+            self.n_ticks += 1
+            occ = getattr(plane, "last_lane_occupancy", None)
+            if occ is not None:
+                metrics.set_gauge("lane_utilization", float(occ))
+            # 3. record: fold completed scores into the prune bounds
+            with tracer.span("publish", track="wavefront", tick=self.n_ticks - 1):
+                for k, score in finished:
+                    state.record(k, float(score), resource=self.n_ticks - 1)
+            # 4. evict: ks the updated bounds prune stop paying mid-fit
+            for k in sorted(plane.inflight_ks(), reverse=True):
+                if not state.should_visit(k) and plane.cancel(k):
+                    metrics.inc("ks_aborted")
+                    tracer.event("abort", track="wavefront", k=k)
+                    state.skip(k, reason="aborted")
+
+        return state.result()
+
+    @property
+    def n_dispatches(self) -> int:
+        """Number of chunk dispatches issued by the last ``run``."""
+        return self.n_ticks
+
+
 __all__ = [
     "EvalPlane",
     "ScalarEvalPlane",
     "WavefrontScheduler",
+    "ElasticWavefrontScheduler",
     "Wave",
     "as_eval_plane",
 ]

@@ -300,6 +300,34 @@ class SimulatedScheduler:
         )
 
 
+@dataclasses.dataclass
+class LaneRefillPolicy:
+    """When and what the elastic executor drains into freed lanes.
+
+    The candidate stream is the Binary Bleed traversal worklist (pre-order
+    by default — the order whose prefixes the serial and threaded drivers
+    walk, so elastic refill preserves their visit semantics: admission only
+    ever *filters* that stream against the live prune bounds, never
+    reorders it). ``max_backlog`` bounds how many (k, perturbation) lanes
+    may sit queued in the plane beyond its occupied slots — a small backlog
+    keeps freed lanes refilling without host round-trips, while a large one
+    admits ks so early that later prunes must evict them; ``None`` uses one
+    slot-pool's worth (the plane's ``slots``).
+    """
+
+    order: Order = "pre"
+    max_backlog: int | None = None
+
+    def worklist(self, ks: Sequence[int]) -> list[int]:
+        from .traversal import traversal_sort
+
+        return traversal_sort(list(ks), self.order)
+
+    def admit(self, plane) -> bool:
+        cap = self.max_backlog if self.max_backlog is not None else getattr(plane, "slots", 1)
+        return plane.backlog < cap
+
+
 class ThreadPoolScheduler:
     """Real-concurrency Binary Bleed across thread resources (Alg 3/4).
 

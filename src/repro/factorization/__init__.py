@@ -20,7 +20,8 @@ from .nmfk import (  # noqa: F401
     nmfk_score,
     nmfk_score_batched,
 )
-from .planes import KMeansBatchPlane, NMFkBatchPlane  # noqa: F401
+from .batching import WarmStartCache  # noqa: F401
+from .planes import KMeansBatchPlane, NMFkBatchPlane, NMFkElasticPlane  # noqa: F401
 from .rescal import (  # noqa: F401
     RESCALResult,
     make_rescalk_evaluator,

@@ -22,6 +22,54 @@ import jax
 import jax.numpy as jnp
 
 
+class WarmStartCache:
+    """Completed-fit W factors keyed by (k, perturbation) for cross-k warm starts.
+
+    Binary Bleed's pre-order visit order clusters nearby k's in time, so a
+    freshly drained lane usually has a recently-completed neighbor whose
+    aligned W is a far better starting point than a random draw. ``nearest``
+    prefers the same perturbation index (its noise realization matches the
+    new lane's), breaking distance ties toward smaller k (truncating a
+    larger fit discards information; padding a smaller one keeps it all).
+
+    Stores at most ``per_k`` entries per k (one per perturbation is plenty)
+    and evicts whole k's FIFO beyond ``max_ks`` — W factors are (n, k_pad)
+    and the search only ever benefits from recent neighbors.
+    """
+
+    def __init__(self, window: int = 8, max_ks: int = 16):
+        self.window = int(window)
+        self.max_ks = int(max_ks)
+        self._by_k: dict[int, dict[int, jax.Array]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def put(self, k: int, perturbation: int, w: jax.Array) -> None:
+        slot = self._by_k.setdefault(int(k), {})
+        slot[int(perturbation)] = w
+        while len(self._by_k) > self.max_ks:
+            self._by_k.pop(next(iter(self._by_k)))
+
+    def nearest(self, k: int, perturbation: int) -> tuple[int, jax.Array] | None:
+        """Best (k_src, w_src) within ``window`` of k, or None (cold start)."""
+        k, perturbation = int(k), int(perturbation)
+        best = None
+        for k_src, slot in self._by_k.items():
+            dist = abs(k_src - k)
+            if dist > self.window or not slot:
+                continue
+            p_src = perturbation if perturbation in slot else next(iter(slot))
+            # rank: distance, then mismatched perturbation, then prefer k_src < k
+            rank = (dist, 0 if p_src == perturbation else 1, 0 if k_src <= k else 1)
+            if best is None or rank < best[0]:
+                best = (rank, k_src, slot[p_src])
+        if best is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return best[1], best[2]
+
+
 def next_pow2(n: int) -> int:
     """Smallest power of two >= n (n >= 1)."""
     p = 1

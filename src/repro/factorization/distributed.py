@@ -228,6 +228,7 @@ def _mu_sweeps(
     axis: str,
     comm: str,
     axis_size: int,
+    steps: Array | None = None,
 ):
     """Run ``iters`` multiplicative-update sweeps under the chosen schedule.
 
@@ -238,6 +239,13 @@ def _mu_sweeps(
     H while the ring gather is in flight, then finishes the H-update — a
     one-sweep-stale schedule closed by one final synchronous sweep so the
     measured residual comes from a coupled (W, H) pair.
+
+    ``steps`` (a traced scalar) gates sweeps per call inside the fixed
+    ``iters``-shaped loop: sweep s applies only while ``s < steps`` — the
+    elastic executor's per-lane remaining-budget gate. With ``steps <
+    iters`` under ``"pipelined"`` the closing synchronous sweep is gated
+    off too (the lane's last applied sweep is a stale-H pipe sweep); the
+    elastic conformance tolerance for pipelined runs absorbs this.
     """
     if comm not in COMM_MODES:
         raise ValueError(f"comm must be one of {COMM_MODES}, got {comm!r}")
@@ -273,10 +281,17 @@ def _mu_sweeps(
         h_new = mask_h(h * wtv / (wtw @ h + _EPS))
         return w_new, h_new
 
+    def gated(s, carry, sweep):
+        new = sweep(carry)
+        if steps is None:
+            return new
+        live = s < steps
+        return jnp.where(live, new[0], carry[0]), jnp.where(live, new[1], carry[1])
+
     if comm == "sync" or axis_size == 1 or iters == 0:
-        return jax.lax.fori_loop(0, iters, lambda _, c: sync_sweep(c), (w_l, h))
-    w_l, h = jax.lax.fori_loop(0, iters - 1, lambda _, c: pipe_sweep(c), (w_l, h))
-    return sync_sweep((w_l, h))
+        return jax.lax.fori_loop(0, iters, lambda s, c: gated(s, c, sync_sweep), (w_l, h))
+    w_l, h = jax.lax.fori_loop(0, iters - 1, lambda s, c: gated(s, c, pipe_sweep), (w_l, h))
+    return gated(iters - 1, (w_l, h), sync_sweep)
 
 
 def _dnmf_local(
@@ -456,6 +471,41 @@ def _dnmf_masked_local(
     vsq = jax.lax.psum(jnp.sum(v_l**2), axis)
     err = jnp.sqrt(sq) / jnp.maximum(jnp.sqrt(vsq), _EPS)
     return w_l, err
+
+
+def _dnmf_masked_chunk_local(
+    v_l: Array,
+    w_l: Array,
+    h: Array,
+    k_eff: Array,
+    k_pad: int,
+    chunk: int,
+    axis: str,
+    axis_size: int,
+    comm: str = "sync",
+    steps: Array | None = None,
+) -> tuple[Array, Array, Array]:
+    """Resumable chunk of a masked data-sharded fit: ``chunk`` MU sweeps
+    (per-lane gated to ``steps`` when given) plus the *global* rel_error
+    from the existing psum structure.
+
+    The elastic executor's convergence gate under data sharding: the
+    residual ``||V - WH||_F / ||V||_F`` is assembled from per-shard squared
+    sums with the same two psums the Gram updates already pay, so testing
+    convergence at a chunk boundary costs one extra scalar all-reduce pair
+    — no gather of V or W. ``comm="pipelined"`` runs the one-sweep-stale
+    overlapped schedule *within* the chunk (each chunk closes with one
+    synchronous sweep, exactly like a short ``_mu_sweeps`` run).
+
+    v_l: (n_local, m) row block; w_l: (n_local, k_pad) local rows; h
+    replicated. Returns (w_l, h, rel_error) with rel_error replicated.
+    """
+    active = jnp.arange(k_pad) < k_eff
+    w_l, h = _mu_sweeps(v_l, w_l, h, active, chunk, axis, comm, axis_size, steps=steps)
+    sq = jax.lax.psum(jnp.sum((v_l - w_l @ h) ** 2), axis)
+    vsq = jax.lax.psum(jnp.sum(v_l**2), axis)
+    err = jnp.sqrt(sq) / jnp.maximum(jnp.sqrt(vsq), _EPS)
+    return w_l, h, err
 
 
 def make_local_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:

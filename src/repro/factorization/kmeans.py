@@ -125,33 +125,37 @@ def _masked_kmeanspp_init(key: Array, x: Array, k_eff: Array, k_pad: int) -> Arr
     return centers
 
 
-@functools.partial(jax.jit, static_argnames=("k_pad", "max_iters"))
-def _kmeans_masked(
-    x: Array,
-    k_eff: Array,
-    key: Array,
-    k_pad: int,
-    max_iters: int = 100,
-    tol: float = 1e-6,
-) -> KMeansResult:
-    """Lloyd's algorithm on k_pad slots of which only the first k_eff live."""
-    active = jnp.arange(k_pad) < k_eff  # (k_pad,)
-    centers = _masked_kmeanspp_init(key, x, k_eff, k_pad)
+def _masked_assign(x: Array, centers: Array, k_eff: Array, k_pad: int):
+    """Nearest-active-center labels + inertia for masked centroids."""
+    active = jnp.arange(k_pad) < k_eff
+    d2 = pairwise_sq_dists(x, centers)
+    d2 = jnp.where(active[None, :], d2, jnp.inf)
+    labels = jnp.argmin(d2, axis=1)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return labels, inertia
 
-    def assign(centers):
-        d2 = pairwise_sq_dists(x, centers)
-        d2 = jnp.where(active[None, :], d2, jnp.inf)
-        labels = jnp.argmin(d2, axis=1)
-        inertia = jnp.sum(jnp.min(d2, axis=1))
-        return labels, inertia
+
+def _masked_lloyd(
+    x: Array, centers: Array, k_eff: Array, k_pad: int, max_iters: int, tol: float
+) -> tuple[Array, Array, Array]:
+    """Up to ``max_iters`` masked Lloyd iterations from ``centers``.
+
+    Returns (centers, delta, iters_done). The resumable body shared by
+    ``_kmeans_masked`` and the chunked abort path: the while_loop condition
+    stops *exactly* when ``delta <= tol``, so running it in host-visible
+    chunks (stop when the returned delta clears tol) applies the same
+    iteration sequence as one long call — chunk boundaries are bitwise
+    invisible.
+    """
+    active = jnp.arange(k_pad) < k_eff  # (k_pad,)
 
     def cond(carry):
-        _, _, delta, it = carry
+        _, delta, it = carry
         return jnp.logical_and(delta > tol, it < max_iters)
 
     def body(carry):
-        centers, _, _, it = carry
-        labels, _ = assign(centers)
+        centers, _, it = carry
+        labels, _ = _masked_assign(x, centers, k_eff, k_pad)
         onehot = jax.nn.one_hot(labels, k_pad, dtype=x.dtype)  # (n, k_pad)
         counts = jnp.sum(onehot, axis=0)
         sums = onehot.T @ x
@@ -165,13 +169,53 @@ def _kmeans_masked(
         )
         new_centers = jnp.where(active[:, None], new_centers, 0.0)
         delta = jnp.max(jnp.abs(new_centers - centers) * active[:, None])
-        return new_centers, labels, delta, it + 1
+        return new_centers, delta, it + 1
 
-    labels0, _ = assign(centers)
-    centers, labels, _, iters = jax.lax.while_loop(
-        cond, body, (centers, labels0, jnp.asarray(jnp.inf, x.dtype), jnp.asarray(0))
+    return jax.lax.while_loop(
+        cond, body, (centers, jnp.asarray(jnp.inf, x.dtype), jnp.asarray(0))
     )
-    labels, inertia = assign(centers)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad",))
+def _kmeans_masked_init(x: Array, k_eff: Array, key: Array, k_pad: int) -> Array:
+    """Jit'd masked k-means++ seeding (the chunked path's lane init)."""
+    return _masked_kmeanspp_init(key, x, k_eff, k_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "chunk"))
+def _kmeans_masked_chunk(
+    x: Array, centers: Array, k_eff: Array, k_pad: int, chunk: int, tol: float = 1e-6
+) -> tuple[Array, Array, Array]:
+    """Resumable chunk of a masked Lloyd fit: up to ``chunk`` iterations.
+
+    Returns (centers, delta, iters_done); the caller stops when delta <=
+    tol (bitwise-equal to the unchunked fit — the inner while_loop halts on
+    exactly the same condition) or polls §III-D abort between chunks.
+    """
+    return _masked_lloyd(x, centers, k_eff, k_pad, chunk, tol)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad",))
+def _kmeans_masked_assign(
+    x: Array, centers: Array, k_eff: Array, k_pad: int
+) -> tuple[Array, Array]:
+    """Jit'd final assignment for the chunked path."""
+    return _masked_assign(x, centers, k_eff, k_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "max_iters"))
+def _kmeans_masked(
+    x: Array,
+    k_eff: Array,
+    key: Array,
+    k_pad: int,
+    max_iters: int = 100,
+    tol: float = 1e-6,
+) -> KMeansResult:
+    """Lloyd's algorithm on k_pad slots of which only the first k_eff live."""
+    centers = _masked_kmeanspp_init(key, x, k_eff, k_pad)
+    centers, _, iters = _masked_lloyd(x, centers, k_eff, k_pad, max_iters, tol)
+    labels, inertia = _masked_assign(x, centers, k_eff, k_pad)
     return KMeansResult(centers, labels, inertia, iters)
 
 

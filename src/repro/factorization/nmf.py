@@ -107,6 +107,68 @@ def nmf(
     return NMFResult(w, h, err, jnp.asarray(iters))
 
 
+def _masked_init(v: Array, k_eff: Array, key: Array, k_pad: int) -> tuple[Array, Array]:
+    """Masked W/H init at padded rank — the exact draws ``_nmf_masked`` makes.
+
+    Extracted so chunked/elastic fits can start from the same state a
+    fixed-iteration masked fit starts from (draw-for-draw).
+    """
+    n, m = v.shape
+    active = jnp.arange(k_pad) < k_eff
+    kw, kh = jax.random.split(key)
+    scale = jnp.sqrt(jnp.maximum(jnp.mean(v), _EPS) / k_eff)
+    w = scale * jax.random.uniform(kw, (n, k_pad), v.dtype, 0.1, 1.0)
+    h = scale * jax.random.uniform(kh, (k_pad, m), v.dtype, 0.1, 1.0)
+    return w * active[None, :], h * active[:, None]
+
+
+def _masked_sweeps(
+    v: Array,
+    w: Array,
+    h: Array,
+    k_eff: Array,
+    k_pad: int,
+    sweeps: int,
+    use_kernel: bool = False,
+    steps: Array | None = None,
+) -> tuple[Array, Array, Array]:
+    """``sweeps`` masked MU sweeps from (w, h); returns (w, h, rel_error).
+
+    The resumable body shared by ``_nmf_masked`` and the elastic chunked
+    executors: running it s1 then s2 sweeps applies the same op sequence as
+    one (s1 + s2)-sweep fit, so chunk boundaries are numerically invisible.
+    The returned rel_error against ``v`` is the per-chunk convergence signal
+    the elastic plane's tol gate consumes.
+
+    ``steps`` (a traced scalar) gates the loop per *call* inside a fixed
+    compiled shape: sweep s applies only while ``s < steps``, so a lane
+    whose remaining budget is smaller than the chunk advances exactly
+    ``steps`` sweeps — bit-identical to a ``steps``-sweep fit — without
+    minting a new (chunk-size) compilation.
+    """
+    active = jnp.arange(k_pad) < k_eff
+
+    def body(s, wh):
+        w, h = mu_step(v, *wh, use_kernel=use_kernel)
+        w, h = w * active[None, :], h * active[:, None]
+        if steps is None:
+            return w, h
+        live = s < steps
+        return jnp.where(live, w, wh[0]), jnp.where(live, h, wh[1])
+
+    w, h = jax.lax.fori_loop(0, sweeps, body, (w, h))
+    err = jnp.linalg.norm(v - w @ h) / jnp.maximum(jnp.linalg.norm(v), _EPS)
+    return w, h, err
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "chunk", "use_kernel"))
+def _nmf_masked_chunk(
+    v: Array, w: Array, h: Array, k_eff: Array, k_pad: int, chunk: int, use_kernel: bool = False
+) -> tuple[Array, Array, Array]:
+    """Jit'd resumable chunk of a masked fit (the elastic unit of work)."""
+    return _masked_sweeps(v, w, h, k_eff, k_pad, chunk, use_kernel=use_kernel)
+
+
 @functools.partial(jax.jit, static_argnames=("k_pad", "iters", "use_kernel"))
 def _nmf_masked(
     v: Array,
@@ -123,21 +185,8 @@ def _nmf_masked(
     re-mask each sweep to stop eps-sized drift from re-seeding dead
     components over hundreds of iterations.
     """
-    n, m = v.shape
-    active = jnp.arange(k_pad) < k_eff
-    kw, kh = jax.random.split(key)
-    scale = jnp.sqrt(jnp.maximum(jnp.mean(v), _EPS) / k_eff)
-    w = scale * jax.random.uniform(kw, (n, k_pad), v.dtype, 0.1, 1.0)
-    h = scale * jax.random.uniform(kh, (k_pad, m), v.dtype, 0.1, 1.0)
-    w = w * active[None, :]
-    h = h * active[:, None]
-
-    def body(_, wh):
-        w, h = mu_step(v, *wh, use_kernel=use_kernel)
-        return w * active[None, :], h * active[:, None]
-
-    w, h = jax.lax.fori_loop(0, iters, body, (w, h))
-    err = jnp.linalg.norm(v - w @ h) / jnp.maximum(jnp.linalg.norm(v), _EPS)
+    w, h = _masked_init(v, k_eff, key, k_pad)
+    w, h, err = _masked_sweeps(v, w, h, k_eff, k_pad, iters, use_kernel=use_kernel)
     return NMFResult(w, h, err, jnp.asarray(iters))
 
 

@@ -394,6 +394,220 @@ def nmfk_score_sharded(
     return fn(ks_arr, keys, v)
 
 
+# ---------------------------------------------------------------------------
+# elastic lane kernels: chunked convergence-gated fits with warm starts
+# ---------------------------------------------------------------------------
+# The elastic executor schedules *fit-chunks*, not whole fits: one lane is
+# one perturbation fit of one k, advanced ``chunk`` MU sweeps per dispatch.
+# The kernels below are the device-side lane lifecycle — cold/warm init,
+# resumable chunk (single-device and mesh-sharded), and the pooled-column
+# scoring of a completed ensemble. Cold-started lanes are draw-for-draw
+# identical to ``_nmfk_score_masked``'s inner fits, so a lane that runs to
+# the full sweep budget reproduces the fixed-iteration batched plane's
+# factors chunk boundaries notwithstanding.
+
+
+def elastic_lane_keys(key: Array, k: int, n_perturbs: int) -> tuple[Array, Array]:
+    """Per-perturbation (pkeys, fkeys) for k — ``_nmfk_score_masked``'s
+    schedule under the planes' ``fold_in(key, k)`` convention."""
+    kp, kf = jax.random.split(jax.random.fold_in(key, k))
+    return jax.random.split(kp, n_perturbs), jax.random.split(kf, n_perturbs)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "epsilon"))
+def elastic_lane_init(
+    v: Array, k_eff: Array, pkey: Array, fkey: Array, k_pad: int, epsilon: float
+) -> tuple[Array, Array]:
+    """Cold lane init: the exact (W, H) a masked fit of perturbation
+    ``pkey`` / init ``fkey`` starts from."""
+    from .nmf import _masked_init
+
+    vp = _perturb(pkey, v, epsilon)
+    return _masked_init(vp, k_eff, fkey, k_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "epsilon"))
+def elastic_lane_warm_init(
+    v: Array,
+    k_eff: Array,
+    pkey: Array,
+    fkey: Array,
+    w_src: Array,
+    k_src: Array,
+    k_pad: int,
+    epsilon: float,
+) -> tuple[Array, Array]:
+    """Warm lane init from a completed neighbor's W (cross-k warm start).
+
+    The first ``min(k_eff, k_src)`` columns of the cold-draw W are replaced
+    by the source fit's columns, L2-renormalized to the cold draw's column
+    norms so the init's magnitude statistics (and the MU updates' scale
+    balance against the fresh H) are preserved; extra columns (k_eff >
+    k_src) and H keep their cold draws. Zero source columns fall back to
+    the cold draw — a zeroed column is unrecoverable under Lee-Seung.
+    """
+    from .nmf import _masked_init
+
+    vp = _perturb(pkey, v, epsilon)
+    w0, h0 = _masked_init(vp, k_eff, fkey, k_pad)
+    take = jnp.arange(k_pad) < jnp.minimum(k_eff, k_src)
+    src_norm = jnp.linalg.norm(w_src, axis=0, keepdims=True)
+    unit = w_src / jnp.maximum(src_norm, 1e-12)
+    tgt_norm = jnp.linalg.norm(w0, axis=0, keepdims=True)
+    w = jnp.where((take & (src_norm[0] > 1e-12))[None, :], unit * tgt_norm, w0)
+    return w, h0
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "chunk", "epsilon", "use_kernel"))
+def elastic_chunk(
+    v: Array,
+    w: Array,
+    h: Array,
+    k_eff: Array,
+    steps: Array,
+    pkeys: Array,
+    k_pad: int,
+    chunk: int,
+    epsilon: float,
+    use_kernel: bool = False,
+) -> tuple[Array, Array, Array]:
+    """Advance a batch of lanes up to ``chunk`` masked MU sweeps (one dispatch).
+
+    w (L, n, k_pad) / h (L, k_pad, m) / k_eff (L,) / steps (L,) / pkeys
+    (L, 2). Lane i applies exactly ``steps[i] <= chunk`` sweeps inside the
+    fixed compiled shape (lanes near their sweep budget trim their final
+    chunk without a fresh compilation). Each lane regenerates its perturbed
+    V from its pkey (cheaper than holding L perturbed copies of V in device
+    memory) and reports the rel_error against it — the convergence signal
+    the tol gate tests host-side.
+    """
+    from .nmf import _masked_sweeps
+
+    def lane(w_i, h_i, k_i, st, pk):
+        vp = _perturb(pk, v, epsilon)
+        return _masked_sweeps(
+            vp, w_i, h_i, k_i, k_pad, chunk, use_kernel=use_kernel, steps=st
+        )
+
+    return jax.vmap(lane)(w, h, k_eff, steps, pkeys)
+
+
+@functools.lru_cache(maxsize=64)
+def _elastic_chunk_sharded_fn(
+    mesh,
+    k_pad: int,
+    chunk: int,
+    epsilon: float,
+    use_kernel: bool,
+    lane_axis: str,
+    data_axis: str,
+    comm: str,
+):
+    """Build (once per config) the jitted shard_map'd elastic chunk step.
+
+    Lanes split over ``lane_axis``; with a non-trivial ``data_axis`` each
+    lane's rows (of both V and its W block) are additionally sharded and
+    the chunk runs the psum'd Gram structure of ``_dnmf_masked_chunk_local``
+    — the convergence residual is assembled from the same psums, so the tol
+    gate under data sharding costs one scalar all-reduce pair per chunk.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from .distributed import _dnmf_masked_chunk_local, shard_map
+    from .nmf import _masked_sweeps
+
+    shape = dict(mesh.shape)
+    data = shape.get(data_axis, 1)
+
+    if data == 1:
+        def body(w_b, h_b, k_b, st_b, pk_b, v):
+            def lane(w_i, h_i, k_i, st, pk):
+                vp = _perturb(pk, v, epsilon)
+                return _masked_sweeps(
+                    vp, w_i, h_i, k_i, k_pad, chunk, use_kernel=use_kernel, steps=st
+                )
+
+            return jax.vmap(lane)(w_b, h_b, k_b, st_b, pk_b)
+
+        in_specs = (
+            P(lane_axis), P(lane_axis), P(lane_axis), P(lane_axis), P(lane_axis, None), P(),
+        )
+        out_specs = (P(lane_axis), P(lane_axis), P(lane_axis))
+    else:
+        def body(w_b, h_b, k_b, st_b, pk_b, v_l):
+            n_l, m = v_l.shape
+            n_total = n_l * data
+            idx = jax.lax.axis_index(data_axis)
+
+            def lane(w_l, h_l, k_i, st, pk):
+                noise = jax.random.uniform(
+                    pk, (n_total, m), v_l.dtype, 1.0 - epsilon, 1.0 + epsilon
+                )
+                vp_l = v_l * jax.lax.dynamic_slice_in_dim(noise, idx * n_l, n_l, axis=0)
+                return _dnmf_masked_chunk_local(
+                    vp_l, w_l, h_l, k_i, k_pad, chunk, data_axis, data,
+                    comm=comm, steps=st,
+                )
+
+            return jax.vmap(lane)(w_b, h_b, k_b, st_b, pk_b)
+
+        in_specs = (
+            P(lane_axis, data_axis), P(lane_axis), P(lane_axis), P(lane_axis),
+            P(lane_axis, None), P(data_axis, None),
+        )
+        # h and err are replicated over data (psum'd Grams / residual) but
+        # the RNG draws defeat replication inference
+        out_specs = (P(lane_axis, data_axis), P(lane_axis), P(lane_axis))
+
+    return jax.jit(shard_map(body, mesh, in_specs, out_specs, check_rep=(data == 1)))
+
+
+def elastic_chunk_sharded(
+    v: Array,
+    w: Array,
+    h: Array,
+    k_eff: Array,
+    steps: Array,
+    pkeys: Array,
+    mesh,
+    k_pad: int,
+    chunk: int,
+    epsilon: float,
+    use_kernel: bool = False,
+    lane_axis: str = "lane",
+    data_axis: str = "data",
+    comm: str = "sync",
+) -> tuple[Array, Array, Array]:
+    """``elastic_chunk`` sharded over a 2-D ``Mesh((lane, data))``.
+
+    Requires the lane batch divisible by the lane count and, when data > 1,
+    v's rows divisible by the data-axis size (the elastic plane's slot
+    bucketing guarantees the former).
+    """
+    lanes = dict(mesh.shape)[lane_axis]
+    if w.shape[0] % lanes:
+        raise ValueError(f"lane batch {w.shape[0]} not divisible by lane count {lanes}")
+    fn = _elastic_chunk_sharded_fn(
+        mesh, int(k_pad), int(chunk), float(epsilon), bool(use_kernel),
+        lane_axis, data_axis, str(comm),
+    )
+    return fn(w, h, k_eff, steps, pkeys, v)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "n_perturbs", "use_kernel"))
+def elastic_pooled_score(
+    w_all: Array,
+    errs: Array,
+    k_eff: Array,
+    k_pad: int,
+    n_perturbs: int,
+    use_kernel: bool = False,
+) -> NMFkScore:
+    """Score a completed lane ensemble (p, n, k_pad) — the shared pooled-
+    column silhouette tail, jitted once per (k_pad, n_perturbs)."""
+    return _pooled_w_score(w_all, errs, k_eff, k_pad, n_perturbs, use_kernel)
+
+
 def make_nmfk_evaluator(
     v: Array,
     key: Array,

@@ -159,11 +159,27 @@ class _BatchPlaneBase:
                 kind=kind, ks=lane_ks, n_real=real, data_shards=self.data_count,
             )
 
+    # chunk size of the abortable scalar path; per-chunk sweep counts land
+    # in ``last_scalar_sweeps`` (the abort regression test's probe)
+    abort_chunk = 25
+    last_scalar_sweeps: int | None = None
+
     def evaluate_one(self, k: int, should_abort=None) -> float:
-        # one fused dispatch; no chunk boundary to poll. Bucketing makes
-        # this reuse the nearest already-compiled (batch, k_pad) shape
-        # rather than compiling a batch-of-one executable.
-        del should_abort
+        # Without an abort callback: one fused dispatch (bucketing reuses
+        # the nearest already-compiled (batch, k_pad) shape rather than
+        # compiling a batch-of-one executable). With one, route through the
+        # subclass's chunked scalar path so §III-D prunes landing mid-fit
+        # actually stop the sweeps — the batched planes used to discard the
+        # callback entirely.
+        if should_abort is not None:
+            return self._evaluate_one_chunked(k, should_abort)
+        return self.evaluate_batch([k])[0]
+
+    def _evaluate_one_chunked(self, k: int, should_abort) -> float:
+        # fallback for planes without a resumable fit: poll once up front
+        # (a k pruned before dispatch costs nothing), then run the fused fit
+        if should_abort():
+            return float("nan")
         return self.evaluate_batch([k])[0]
 
 
@@ -230,6 +246,58 @@ class NMFkBatchPlane(_BatchPlaneBase):
             k_pad=k_pad, n_perturbs=self.n_perturbs, nmf_iters=self.nmf_iters,
             epsilon=self.epsilon, use_kernel=self.use_kernel,
         )
+
+    def _evaluate_one_chunked(self, k: int, should_abort) -> float:
+        """Scalar NMFk with §III-D abort polling at chunk boundaries.
+
+        Runs the k's perturbation ensemble as cold elastic lanes advanced
+        ``abort_chunk`` sweeps per dispatch (draw-for-draw and
+        sweep-for-sweep identical to the fused batch fit when it runs to
+        completion — the elastic kernels share ``_masked_sweeps``). If the
+        abort fires between chunks, the remaining sweeps are never paid and
+        the partial ensemble is scored as-is: Binary Bleed pruned this k,
+        so its score only matters for accounting, never for ``k_optimal``
+        (pruning soundness). Aborts before the first chunk return NaN — a
+        void score no threshold test selects. Single-device by design: the
+        scalar path is the thread executor's, not the mesh's.
+        """
+        from .nmfk import (
+            elastic_chunk,
+            elastic_lane_init,
+            elastic_lane_keys,
+            elastic_pooled_score,
+        )
+
+        k = int(k)
+        k_pad = self.k_pad if self.k_pad is not None else k
+        P = self.n_perturbs
+        kj = jnp.asarray(k)
+        pkeys, fkeys = elastic_lane_keys(self.key, k, P)
+        pairs = [
+            elastic_lane_init(self.v, kj, pkeys[p], fkeys[p], k_pad, self.epsilon)
+            for p in range(P)
+        ]
+        w = jnp.stack([p[0] for p in pairs])
+        h = jnp.stack([p[1] for p in pairs])
+        keff = jnp.full((P,), k, jnp.int32)
+        done = 0
+        errs = None
+        self.last_scalar_sweeps = 0
+        while done < self.nmf_iters:
+            if should_abort():
+                break
+            step = min(self.abort_chunk, self.nmf_iters - done)
+            steps = jnp.full((P,), step, jnp.int32)
+            w, h, errs = elastic_chunk(
+                self.v, w, h, keff, steps, pkeys, k_pad, self.abort_chunk,
+                self.epsilon, use_kernel=self.use_kernel,
+            )
+            done += step
+            self.last_scalar_sweeps = done * P
+        if errs is None:
+            return float("nan")
+        sc = elastic_pooled_score(w, errs, kj, k_pad, P, self.use_kernel)
+        return float(sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette)
 
     _MAX_TRACE_SWEEPS = 16  # per-sweep modeled spans emitted per dispatch
 
@@ -363,6 +431,55 @@ class KMeansBatchPlane(_BatchPlaneBase):
         self._sharded_fns[k_pad] = fn
         return fn
 
+    def _evaluate_one_chunked(self, k: int, should_abort) -> float:
+        """Scalar K-Means with abort polling between Lloyd chunks.
+
+        Chunking is bitwise-free here: the resumable ``_kmeans_masked_chunk``
+        halts on exactly the convergence condition the fused while_loop
+        uses, so an unaborted chunked fit reproduces the batch fit's
+        centroids; the host stops early when delta clears tol. Aborts
+        before the first chunk return NaN (void score).
+        """
+        from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
+
+        from .kmeans import (
+            _kmeans_masked_assign,
+            _kmeans_masked_chunk,
+            _kmeans_masked_init,
+        )
+
+        k = int(k)
+        k_pad = self.k_pad if self.k_pad is not None else k
+        sub = jax.random.fold_in(self.key, k)
+        kj = jnp.asarray(k)
+        centers = _kmeans_masked_init(self.x, kj, sub, k_pad)
+        it = 0
+        ran = False
+        self.last_scalar_sweeps = 0
+        while it < self.max_iters:
+            if should_abort():
+                break
+            chunk = min(self.abort_chunk, self.max_iters - it)
+            centers, delta, did = _kmeans_masked_chunk(self.x, centers, kj, k_pad, chunk)
+            it += int(did)
+            ran = True
+            self.last_scalar_sweeps = it
+            if float(delta) <= 1e-6:
+                break
+        if not ran:
+            return float("nan")
+        labels, _ = _kmeans_masked_assign(self.x, centers, kj, k_pad)
+        if self.score == "davies_bouldin":
+            cluster_mask = (jnp.arange(k_pad) < kj)[None, :]
+            scores = davies_bouldin_score_masked(
+                self.x, labels[None], k_pad, cluster_mask=cluster_mask
+            )
+        else:
+            scores = silhouette_score_masked(
+                self.x, labels[None], k_pad, use_kernel=self.use_kernel
+            )
+        return float(scores[0])
+
     def evaluate_batch(self, ks: Sequence[int]) -> list[float]:
         from repro.core.scoring import davies_bouldin_score_masked, silhouette_score_masked
 
@@ -402,4 +519,365 @@ class KMeansBatchPlane(_BatchPlaneBase):
             return [float(s) for s in scores[:n_real]]
 
 
-__all__ = ["NMFkBatchPlane", "KMeansBatchPlane"]
+# ---------------------------------------------------------------------------
+# elastic plane: continuous batching of (k, perturbation) fit-chunks
+# ---------------------------------------------------------------------------
+import dataclasses
+from collections import deque
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One occupied slot: a single perturbation fit of a single k."""
+
+    k: int
+    p: int
+    done: int = 0  # MU sweeps applied so far
+    prev_err: float = float("inf")  # rel_error at the previous chunk boundary
+
+
+@dataclasses.dataclass
+class _KTask:
+    """Host-side lifecycle of one submitted k (its P perturbation lanes)."""
+
+    pkeys: Array  # (P, 2) perturbation-noise keys
+    fkeys: Array  # (P, 2) init keys
+    w_parts: dict = dataclasses.field(default_factory=dict)  # p -> (n, k_pad) W
+    errs: dict = dataclasses.field(default_factory=dict)  # p -> final rel_error
+    cancelled: bool = False
+    scored: bool = False
+
+
+class NMFkElasticPlane:
+    """Convergence-gated chunked NMFk fits over a fixed pool of lane slots.
+
+    The unit of dispatch is a *chunk* — ``chunk`` masked MU sweeps of every
+    occupied lane, one jit'd vmapped (or shard_map'd) call at a fixed
+    padded shape — instead of a whole wave of fixed-iteration fits. One
+    lane is one (k, perturbation) fit. Between chunks, host-side:
+
+      * **convergence gate** — a lane retires when its rel_error improved
+        by less than ``tol`` over the last chunk (or its sweep budget
+        ``nmf_iters`` is exhausted); the sweeps it didn't run are counted
+        as ``sweeps_saved``;
+      * **lane refill** — freed slots immediately drain queued
+        (k, perturbation) lanes submitted by the scheduler, so the batch
+        stays full while ks enter and leave at their own pace
+        (continuous batching applied to the k-search);
+      * **warm starts** — a refilled lane seeds its W from the nearest
+        completed k's factors via ``elastic_lane_warm_init`` (column
+        pad/truncate + re-normalize; cold ``nmf_init``-style draw when the
+        ``WarmStartCache`` has nothing within its window);
+      * **eviction** — ``cancel(k)`` (the scheduler's reaction to a Binary
+        Bleed prune) removes queued lanes and evicts in-flight ones
+        mid-fit, crediting their remaining sweeps to ``sweeps_saved`` —
+        §III-D abort made first-class.
+
+    ``tol <= 0`` disables the gate: every lane runs exactly ``nmf_iters``
+    sweeps and (with ``warm_start=False``) reproduces the fixed-iteration
+    batched plane draw-for-draw — the oracle the conformance tests tighten
+    ``tol`` toward. Accounting invariant (checked by the elastic bench):
+    ``sweeps_run + sweeps_saved == sweeps_fixed_total`` over any completed
+    search, where ``sweeps_fixed_total`` counts ``n_perturbs * nmf_iters``
+    for every submitted k.
+
+    Occupied slots are kept compacted in a prefix (retirement swaps the
+    last occupied lane into the freed slot), and each dispatch runs the
+    bucketed prefix (``bucket_batch`` pow2 policy), so compiled shapes stay
+    O(log slots). Per-lane sweep budgets ride the traced ``steps`` vector —
+    a lane near its budget trims its final chunk inside the same compiled
+    shape.
+    """
+
+    def __init__(
+        self,
+        v: Array,
+        key: Array,
+        n_perturbs: int = 8,
+        nmf_iters: int = 150,
+        epsilon: float = 0.015,
+        statistic: str = "min",
+        k_pad: int | None = None,
+        tol: float = 1e-3,
+        chunk: int = 25,
+        slots: int | None = None,
+        warm_start: bool = True,
+        warm_window: int = 8,
+        use_kernel: bool = False,
+        mesh=None,
+        lane_axis: str = "lane",
+        data_axis: str = "data",
+        comm: str = "sync",
+    ):
+        from .batching import WarmStartCache, next_pow2
+        from .distributed import COMM_MODES
+
+        if statistic not in ("min", "mean"):
+            raise ValueError(f"statistic must be 'min' or 'mean', got {statistic!r}")
+        if comm not in COMM_MODES:
+            raise ValueError(f"comm must be one of {COMM_MODES}, got {comm!r}")
+        if k_pad is None:
+            raise ValueError("NMFkElasticPlane needs an explicit k_pad (slots persist across ks)")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        shape = dict(mesh.shape) if mesh is not None else {}
+        if mesh is not None and lane_axis not in shape:
+            raise ValueError(f"mesh {mesh} has no {lane_axis!r} axis")
+        self.lane_count = shape.get(lane_axis, 1)
+        self.data_count = shape.get(data_axis, 1)
+        if self.data_count > 1 and v.shape[0] % self.data_count:
+            raise ValueError(
+                f"v rows {v.shape[0]} not divisible by data-axis size {self.data_count}"
+            )
+        if slots is None:
+            slots = round_up_multiple(next_pow2(max(2 * n_perturbs, self.lane_count)), self.lane_count)
+        if slots < 1 or slots % max(self.lane_count, 1):
+            raise ValueError(f"slots={slots} must be a positive multiple of lane count {self.lane_count}")
+        self.v = v
+        self.key = key
+        self.n_perturbs = int(n_perturbs)
+        self.nmf_iters = int(nmf_iters)
+        self.epsilon = float(epsilon)
+        self.statistic = statistic
+        self.k_pad = int(k_pad)
+        self.tol = float(tol)
+        self.chunk = int(chunk)
+        self.slots = int(slots)
+        self.warm_start = bool(warm_start)
+        self.use_kernel = bool(use_kernel)
+        self.mesh = mesh
+        self.lane_axis = lane_axis
+        self.data_axis = data_axis
+        self.comm = comm
+        self.warm_cache = WarmStartCache(window=warm_window)
+
+        n, m = v.shape
+        self._w = jnp.zeros((self.slots, n, self.k_pad), v.dtype)
+        self._h = jnp.zeros((self.slots, self.k_pad, m), v.dtype)
+        self._keff = jnp.zeros((self.slots,), jnp.int32)
+        self._pkeys = jnp.zeros((self.slots, 2), jnp.uint32)
+        self._slot: list[_Lane | None] = [None] * self.slots
+        self._n_occ = 0
+        self._queue: deque[tuple[int, int]] = deque()
+        self._tasks: dict[int, _KTask] = {}
+        self._ready: list[tuple[int, float]] = []
+
+        # accounting (the bench's invariant: run + saved == fixed_total)
+        self.sweeps_run = 0
+        self.sweeps_saved = 0
+        self.sweeps_fixed_total = 0
+        self.n_ticks = 0
+        self.shapes_compiled: set[tuple[int, int]] = set()
+        self.last_lane_occupancy: float | None = None
+        self.last_lane_utilization: float | None = None  # alias for scheduler gauges
+
+    # -- scheduler surface -------------------------------------------------------
+    @property
+    def backlog(self) -> int:
+        """Queued lanes not yet slotted (admission signal for the refiller)."""
+        return len(self._queue)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and self._n_occ == 0 and not self._ready
+
+    def inflight_ks(self) -> set[int]:
+        """ks submitted but not yet scored or cancelled."""
+        return {
+            k for k, t in self._tasks.items() if not t.scored and not t.cancelled
+        }
+
+    def submit(self, k: int) -> None:
+        """Enqueue the P perturbation lanes of k (slotted by the next tick)."""
+        from .nmfk import elastic_lane_keys
+
+        k = int(k)
+        if k > self.k_pad:
+            raise ValueError(f"k={k} exceeds plane k_pad={self.k_pad}")
+        if k in self._tasks:
+            raise ValueError(f"k={k} already submitted")
+        pkeys, fkeys = elastic_lane_keys(self.key, k, self.n_perturbs)
+        self._tasks[k] = _KTask(pkeys=pkeys, fkeys=fkeys)
+        for p in range(self.n_perturbs):
+            self._queue.append((k, p))
+        self.sweeps_fixed_total += self.n_perturbs * self.nmf_iters
+        get_metrics().inc("sweeps_fixed_total", self.n_perturbs * self.nmf_iters)
+
+    def cancel(self, k: int) -> bool:
+        """Evict k mid-flight (Binary Bleed pruned it): dequeue its pending
+        lanes and free its occupied slots, crediting unspent sweeps."""
+        k = int(k)
+        task = self._tasks.get(k)
+        if task is None or task.scored or task.cancelled:
+            return False
+        task.cancelled = True
+        pending = sum(1 for kk, _ in self._queue if kk == k)
+        if pending:
+            self._queue = deque((kk, p) for kk, p in self._queue if kk != k)
+            self._credit_saved(pending * self.nmf_iters)
+        evicted = 0
+        for i in range(self._n_occ - 1, -1, -1):
+            lane = self._slot[i]
+            if lane is not None and lane.k == k:
+                self._credit_saved(self.nmf_iters - lane.done)
+                self._free_slot(i)
+                evicted += 1
+        get_tracer().event("evict", track=self._dispatch_track(), k=k,
+                           pending=pending, evicted=evicted)
+        return True
+
+    def tick(self) -> list[tuple[int, float]]:
+        """Refill freed slots, advance every occupied lane one chunk, retire
+        converged / budget-exhausted lanes; returns newly scored (k, score)."""
+        tracer = get_tracer()
+        metrics = get_metrics()
+        self._refill()
+        if self._n_occ == 0:
+            out, self._ready = self._ready, []
+            return out
+        self.n_ticks += 1
+        n_occ = self._n_occ
+        batch = bucket_batch(
+            n_occ, lanes=self.lane_count, bucket_min=min(self.lane_count, self.slots),
+            cap=self.slots,
+            compiled=(b for b, kp in self.shapes_compiled if kp == self.k_pad),
+        )
+        shape = (batch, self.k_pad)
+        if shape not in self.shapes_compiled:
+            self.shapes_compiled.add(shape)
+            metrics.inc("compile_count")
+            tracer.event("compile", track=self._dispatch_track(), batch=batch,
+                         k_pad=self.k_pad, lanes=self.lane_count, data=self.data_count)
+        steps_host = [
+            min(self.chunk, self.nmf_iters - self._slot[i].done) if i < n_occ else 0
+            for i in range(batch)
+        ]
+        occupancy = n_occ / batch
+        self.last_lane_occupancy = occupancy
+        self.last_lane_utilization = occupancy
+        metrics.observe("lane_occupancy", occupancy)
+        metrics.set_gauge("lane_occupancy", occupancy)
+        with tracer.span(
+            "chunk", track=self._dispatch_track(), kind="nmfk_elastic", batch=batch,
+            n_occ=n_occ, k_pad=self.k_pad, sweeps=max(steps_host),
+            ks=sorted({self._slot[i].k for i in range(n_occ)}),
+        ):
+            w_new, h_new, errs = self._dispatch(batch, jnp.asarray(steps_host, jnp.int32))
+            errs_host = [float(e) for e in errs[:n_occ]]
+        self._w = jnp.concatenate([w_new, self._w[batch:]], axis=0)
+        self._h = jnp.concatenate([h_new, self._h[batch:]], axis=0)
+
+        retire: list[int] = []
+        for i in range(n_occ):
+            lane = self._slot[i]
+            st = steps_host[i]
+            lane.done += st
+            self.sweeps_run += st
+            metrics.inc("sweeps_run", st)
+            err = errs_host[i]
+            converged = self.tol > 0 and (lane.prev_err - err) < self.tol
+            lane.prev_err = err
+            if converged or lane.done >= self.nmf_iters:
+                if lane.done < self.nmf_iters:
+                    self._credit_saved(self.nmf_iters - lane.done)
+                retire.append(i)
+        for i in sorted(retire, reverse=True):
+            lane = self._slot[i]
+            self._finish_lane(lane, self._w[i], errs_host[i])
+            self._free_slot(i)
+        out, self._ready = self._ready, []
+        return out
+
+    # -- internals ---------------------------------------------------------------
+    def _dispatch_track(self) -> str:
+        return "device:all" if self.mesh is not None else "device:0"
+
+    def _credit_saved(self, sweeps: int) -> None:
+        if sweeps > 0:
+            self.sweeps_saved += sweeps
+            get_metrics().inc("sweeps_saved", sweeps)
+
+    def _dispatch(self, batch: int, steps: Array):
+        from .nmfk import elastic_chunk, elastic_chunk_sharded
+
+        w, h = self._w[:batch], self._h[:batch]
+        keff, pkeys = self._keff[:batch], self._pkeys[:batch]
+        if self.mesh is not None:
+            return elastic_chunk_sharded(
+                self.v, w, h, keff, steps, pkeys, self.mesh, self.k_pad, self.chunk,
+                self.epsilon, use_kernel=self.use_kernel, lane_axis=self.lane_axis,
+                data_axis=self.data_axis, comm=self.comm,
+            )
+        return elastic_chunk(
+            self.v, w, h, keff, steps, pkeys, self.k_pad, self.chunk, self.epsilon,
+            use_kernel=self.use_kernel,
+        )
+
+    def _refill(self) -> None:
+        from .nmfk import elastic_lane_init, elastic_lane_warm_init
+
+        metrics = get_metrics()
+        while self._queue and self._n_occ < self.slots:
+            k, p = self._queue.popleft()
+            task = self._tasks[k]
+            if task.cancelled:  # defensive: cancel() already dequeues
+                continue
+            kj = jnp.asarray(k)
+            src = self.warm_cache.nearest(k, p) if self.warm_start else None
+            if src is not None:
+                k_src, w_src = src
+                w0, h0 = elastic_lane_warm_init(
+                    self.v, kj, task.pkeys[p], task.fkeys[p], w_src,
+                    jnp.asarray(k_src), self.k_pad, self.epsilon,
+                )
+                metrics.inc("warm_start_hits")
+                get_tracer().event("warm_start", track=self._dispatch_track(),
+                                   k=k, p=p, k_src=int(k_src))
+            else:
+                w0, h0 = elastic_lane_init(
+                    self.v, kj, task.pkeys[p], task.fkeys[p], self.k_pad, self.epsilon
+                )
+            i = self._n_occ
+            self._w = self._w.at[i].set(w0)
+            self._h = self._h.at[i].set(h0)
+            self._keff = self._keff.at[i].set(k)
+            self._pkeys = self._pkeys.at[i].set(task.pkeys[p])
+            self._slot[i] = _Lane(k=k, p=p)
+            self._n_occ += 1
+
+    def _free_slot(self, i: int) -> None:
+        """Compact: move the last occupied lane into freed slot i."""
+        j = self._n_occ - 1
+        if i != j:
+            self._w = self._w.at[i].set(self._w[j])
+            self._h = self._h.at[i].set(self._h[j])
+            self._keff = self._keff.at[i].set(self._keff[j])
+            self._pkeys = self._pkeys.at[i].set(self._pkeys[j])
+            self._slot[i] = self._slot[j]
+        self._slot[j] = None
+        self._n_occ = j
+
+    def _finish_lane(self, lane: _Lane, w_row: Array, err: float) -> None:
+        from .nmfk import elastic_pooled_score
+
+        task = self._tasks[lane.k]
+        task.w_parts[lane.p] = w_row
+        task.errs[lane.p] = err
+        self.warm_cache.put(lane.k, lane.p, w_row)
+        if len(task.w_parts) < self.n_perturbs or task.cancelled:
+            return
+        w_all = jnp.stack([task.w_parts[p] for p in range(self.n_perturbs)])
+        errs = jnp.asarray(
+            [task.errs[p] for p in range(self.n_perturbs)], self.v.dtype
+        )
+        sc = elastic_pooled_score(
+            w_all, errs, jnp.asarray(lane.k), self.k_pad, self.n_perturbs,
+            self.use_kernel,
+        )
+        score = float(sc.min_silhouette if self.statistic == "min" else sc.mean_silhouette)
+        task.scored = True
+        task.w_parts.clear()  # the warm cache holds what future ks need
+        self._ready.append((lane.k, score))
+
+
+__all__ = ["NMFkBatchPlane", "KMeansBatchPlane", "NMFkElasticPlane"]

@@ -22,6 +22,16 @@ Validate on CPU with 8 virtual devices:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.ksearch --executor sharded --k-max 32
+
+``--executor elastic`` replaces fixed-iteration waves with continuous
+batching over fit-chunks: lanes retire as soon as their fit converges
+(``--tol``), freed slots refill from the worklist mid-stream, refilled ks
+warm-start from completed neighbors (``--warm-start``), and §III-D prunes
+evict in-flight ks between chunks. Shard-maps like ``sharded`` when
+``--lanes`` / ``--data-shards`` are given:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.ksearch --executor elastic --k-max 32
 """
 from __future__ import annotations
 
@@ -34,8 +44,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    ElasticWavefrontScheduler,
     FileCoordinator,
     InProcessCoordinator,
+    LaneRefillPolicy,
     SearchSpace,
     ThreadPoolScheduler,
     WavefrontScheduler,
@@ -44,7 +56,7 @@ from repro.core import (
 )
 from repro.factorization.distributed import distributed_nmf, make_local_mesh
 from repro.factorization.nmfk import nmfk_score
-from repro.factorization.planes import NMFkBatchPlane
+from repro.factorization.planes import NMFkBatchPlane, NMFkElasticPlane
 from repro.factorization.synthetic import nmf_data
 from repro.launch.mesh import SubmeshPool, make_wave_mesh
 from repro.obs import NULL_TRACER, Metrics, Tracer, use_metrics, use_tracer
@@ -80,12 +92,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--distributed-fit", action="store_true",
                     help="run each NMF fit via shard_map over the resource's sub-mesh")
     ap.add_argument("--executor", default="threads",
-                    choices=["threads", "batched", "sharded"],
+                    choices=["threads", "batched", "sharded", "elastic"],
                     help="threads: one fit per k per worker; batched: wavefront "
                     "frontiers as one padded vmapped NMFk fit per wave; sharded: "
                     "wavefront frontiers shard_map'd over a (lane, data) mesh — "
                     "parallel-over-k across lanes, distributed-within-k when "
-                    "--data-shards > 1")
+                    "--data-shards > 1; elastic: continuous batching over "
+                    "fit-chunks — lanes retire on per-fit convergence (--tol), "
+                    "freed slots refill from the worklist, new ks warm-start "
+                    "from neighbors (shard-maps like sharded when --lanes or "
+                    "--data-shards is given)")
     ap.add_argument("--max-wave", type=int, default=None,
                     help="cap ks per batched dispatch (batched/sharded executors)")
     ap.add_argument("--lanes", type=int, default=None,
@@ -101,6 +117,20 @@ def main(argv=None) -> dict:
                     "overlaps the in-flight reduction with the local W-update "
                     "(one-sweep-stale H, final sync sweep). Only meaningful "
                     "with --executor sharded and --data-shards > 1")
+    ap.add_argument("--tol", type=float, default=1e-3,
+                    help="elastic convergence gate: a lane retires when its "
+                    "rel_error improved by less than this over the last chunk "
+                    "(chunk-size dependent; <= 0 disables the gate — every "
+                    "lane then runs exactly --nmf-iters sweeps, reproducing "
+                    "the batched executor draw-for-draw)")
+    ap.add_argument("--fit-chunk", type=int, default=25,
+                    help="elastic chunk size: MU sweeps per dispatch between "
+                    "convergence checks / refills / abort polls")
+    ap.add_argument("--warm-start", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="seed refilled elastic lanes from the nearest "
+                    "completed k's W (column pad/truncate + re-normalize); "
+                    "--no-warm-start cold-starts every lane")
     ap.add_argument("--compile-cache", default=None, metavar="DIR",
                     help="persistent jit compile cache dir: the handful of "
                     "bucketed (batch, k_pad) shapes compile once across runs")
@@ -152,6 +182,43 @@ def main(argv=None) -> dict:
 
 
 def _run_search(args, ap, space, v, key, evaluate):
+    if args.executor == "elastic":
+        if not args.quiet:
+            for flag, used in (("--journal", args.journal),
+                               ("--distributed-fit", args.distributed_fit),
+                               ("--resources", args.resources != ap.get_default("resources")),
+                               ("--max-wave", args.max_wave is not None)):
+                if used:
+                    print(f"note: {flag} is ignored by the elastic executor")
+        mesh = None
+        if args.lanes is not None or args.data_shards > 1:
+            mesh = make_wave_mesh(lanes=args.lanes, data=args.data_shards)
+        plane = NMFkElasticPlane(
+            v, key, n_perturbs=args.n_perturbs, nmf_iters=args.nmf_iters,
+            k_pad=args.k_max, tol=args.tol, chunk=args.fit_chunk,
+            warm_start=args.warm_start, mesh=mesh, comm=args.comm,
+        )
+        sched = ElasticWavefrontScheduler(space, refill=LaneRefillPolicy(order=args.order))
+        t0 = time.time()
+        result = sched.run(plane)
+        dt = time.time() - t0
+        extra = {
+            "ticks": sched.n_ticks,
+            "compiled_shapes": sorted(plane.shapes_compiled),
+            "tol": args.tol,
+            "fit_chunk": args.fit_chunk,
+            "warm_start": args.warm_start,
+            "sweeps_run": plane.sweeps_run,
+            "sweeps_saved": plane.sweeps_saved,
+            "sweeps_fixed_total": plane.sweeps_fixed_total,
+            "warm_start_hits": plane.warm_cache.hits,
+            "lane_occupancy": plane.last_lane_occupancy,
+            "lane_utilization_last": plane.last_lane_utilization,
+        }
+        if mesh is not None:
+            extra["mesh"] = {"lanes": plane.lane_count, "data": plane.data_count}
+            extra["comm"] = args.comm
+        return result, dt, extra
     if args.executor in ("batched", "sharded"):
         if not args.quiet:
             ignored = (

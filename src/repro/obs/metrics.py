@@ -15,11 +15,17 @@ Conventional names used across the instrumented layers:
 
   counters   ks_visited, ks_skipped, ks_aborted, ks_journaled,
              compile_count, publish_count, bound_merges, lock_broken,
-             speculations, failures, joins
+             speculations, failures, joins,
+             sweeps_run / sweeps_saved / sweeps_fixed_total (the elastic
+             executor's MU-sweep accounting: run + saved == fixed_total),
+             warm_start_hits (elastic lanes seeded from a neighbor's W)
   gauges     ks_candidates, heartbeat_age_max, lo_bound, hi_bound,
-             lane_utilization (real / dispatched lanes of the last wave)
+             lane_utilization (real / dispatched lanes of the last wave),
+             lane_occupancy (occupied / dispatched lanes of the last
+             elastic chunk)
   histograms wave_size, fit_seconds, publish_latency_s, lock_wait_s,
-             lane_utilization (per-dispatch distribution)
+             lane_utilization (per-dispatch distribution),
+             lane_occupancy (per-chunk distribution)
 """
 from __future__ import annotations
 
@@ -170,6 +176,16 @@ class Metrics:
             "compile_count": counters.get("compile_count", 0),
             "publish_count": counters.get("publish_count", 0),
         }
+        if counters.get("sweeps_fixed_total"):
+            # elastic executor ran: surface the sweep-level savings next to
+            # the k-level visit fraction (both are fractions of naive work)
+            run = counters.get("sweeps_run", 0)
+            fixed = counters["sweeps_fixed_total"]
+            search["sweeps_run"] = run
+            search["sweeps_saved"] = counters.get("sweeps_saved", 0)
+            search["sweeps_fixed_total"] = fixed
+            search["sweep_fraction"] = _finite(run / fixed)
+            search["warm_start_hits"] = counters.get("warm_start_hits", 0)
         return {"search": search, "counters": counters, "gauges": gauges, "histograms": hists}
 
 

@@ -7,7 +7,8 @@ runtime — same scaffolding as ``tests/_sharded_child.py``). argv[1] is the
 expected device count.
 
 The conformance matrix: executors {scalar, batched, lane-sharded,
-data-sharded sync, data-sharded pipelined} × models {NMFk, KMeans}, all on
+data-sharded sync, data-sharded pipelined, elastic} × models {NMFk, KMeans
+(elastic is NMFk-only)}, all on
 fixed seeds, asserting identical ``k_optimal`` from every executor's
 search (pinned to the planted rank, not just mutual agreement) and score
 agreement within the documented tolerances:
@@ -133,6 +134,49 @@ def main() -> None:
         v, key, n_perturbs=fit["n_perturbs"], nmf_iters=fit["nmf_iters"]
     )
     k_opts = _searches_agree(((2, 8), 0.8), nmfk_planes(), scalar_eval, 4, core)
+
+    # ---------------- elastic executor ------------------------------------
+    # At tol=0 / warm_start=False the elastic plane's chunked lanes are
+    # draw-for-draw the batched plane's fixed-iteration fits, so its curves
+    # inherit the batched tolerances (TOL_LANE lane-sharded, TOL_DATA
+    # data-sharded). The searches then run the production config (gated tol
+    # + warm starts) and must still land on the planted rank.
+    from repro.core import ElasticWavefrontScheduler
+    from repro.factorization.planes import NMFkElasticPlane
+
+    def elastic_planes(**over):
+        cfg = dict(fit, chunk=20, warm_start=False, tol=0.0)
+        cfg.update(over)
+        return {
+            "elastic": lambda: NMFkElasticPlane(v, key, **cfg),
+            "elastic_lane": lambda: NMFkElasticPlane(v, key, mesh=mesh_lane, **cfg),
+            "elastic_data": lambda: NMFkElasticPlane(v, key, mesh=mesh_data, **cfg),
+        }
+
+    for name, mk in elastic_planes().items():
+        plane = mk()
+        for k in ks:
+            plane.submit(k)
+        scores = {}
+        while not plane.idle:
+            for kk, s in plane.tick():
+                scores[kk] = s
+        tol = TOL_DATA if (name == "elastic_data" and data > 1) else TOL_LANE
+        np.testing.assert_allclose(
+            [scores[k] for k in ks], curves["batched"], atol=tol,
+            err_msg=f"{name} tol=0 curve diverged from the batched oracle",
+        )
+
+    for name, mk in elastic_planes(tol=1e-4, warm_start=True).items():
+        plane = mk()
+        res = ElasticWavefrontScheduler(make_space((2, 8), 0.8)).run(plane)
+        assert res.k_optimal == 4, (
+            f"{name} gated/warm search diverged from planted rank: {res.k_optimal}"
+        )
+        assert plane.sweeps_run + plane.sweeps_saved == plane.sweeps_fixed_total, (
+            f"{name} sweep accounting broke: {plane.sweeps_run} + "
+            f"{plane.sweeps_saved} != {plane.sweeps_fixed_total}"
+        )
 
     # ---------------- KMeans ----------------------------------------------
     xk, _ = blob_data(key, n=240, d=5, k_true=5, std=0.3, spread=10.0)

@@ -1,0 +1,260 @@
+"""Elastic wavefront executor: convergence-gated chunked fits, lane refill,
+cross-k warm starts, and the §III-D chunk-boundary abort path.
+
+The fixed-iteration oracle for every comparison here is the batched plane
+(``NMFkBatchPlane``): at ``tol=0`` / ``warm_start=False`` the elastic plane
+runs the identical draw schedule in chunks, so curves must agree exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ElasticWavefrontScheduler,
+    LaneRefillPolicy,
+    as_eval_plane,
+    binary_bleed_search,
+    make_space,
+)
+from repro.factorization.batching import WarmStartCache
+from repro.factorization.planes import (
+    KMeansBatchPlane,
+    NMFkBatchPlane,
+    NMFkElasticPlane,
+)
+from repro.factorization.synthetic import blob_data, nmf_data
+
+KEY = jax.random.PRNGKey(0)
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    v, _, _ = nmf_data(jax.random.fold_in(KEY, 2), n=48, m=52, k_true=4)
+    return v
+
+
+def _drain(plane):
+    """Submit nothing new; tick until idle, collecting {k: score}."""
+    scores = {}
+    while not plane.idle:
+        for k, s in plane.tick():
+            scores[k] = s
+    return scores
+
+
+FIT = dict(n_perturbs=3, nmf_iters=45, k_pad=6, chunk=15, warm_start=False)
+KS = [3, 4, 5]
+
+
+@functools.lru_cache(maxsize=16)
+def _elastic_curve(tol: float):
+    """(scores over KS, total sweeps run) at the given convergence tol."""
+    plane = NMFkElasticPlane(_fixture(), KEY, tol=tol, **FIT)
+    for k in KS:
+        plane.submit(k)
+    scores = _drain(plane)
+    return tuple(scores[k] for k in KS), plane.sweeps_run
+
+
+# ---------------------------------------------------------------------------
+# warm-start cache
+# ---------------------------------------------------------------------------
+def test_warm_cache_prefers_near_same_perturbation_then_smaller_k():
+    c = WarmStartCache(window=8)
+    w = {k: jnp.full((4, 8), float(k)) for k in (4, 5, 7, 8)}
+    c.put(5, 0, w[5])
+    c.put(7, 1, w[7])
+    # distance tie (5 and 7 both at |k-6|=1): same perturbation wins
+    k_src, w_src = c.nearest(6, 0)
+    assert k_src == 5 and float(w_src[0, 0]) == 5.0
+    # same distance + same perturbation on both sides: smaller k wins
+    c2 = WarmStartCache(window=8)
+    c2.put(4, 0, w[4])
+    c2.put(8, 0, w[8])
+    assert c2.nearest(6, 0)[0] == 4
+    # closest k beats everything else
+    assert c2.nearest(8, 1)[0] == 8
+
+
+def test_warm_cache_window_and_fifo_eviction():
+    c = WarmStartCache(window=2, max_ks=3)
+    for k in (2, 3, 4):
+        c.put(k, 0, jnp.zeros((2, 4)))
+    assert c.nearest(9, 0) is None  # all further than window
+    assert c.misses == 1
+    c.put(5, 0, jnp.zeros((2, 4)))  # evicts k=2 (FIFO beyond max_ks)
+    assert c.nearest(2, 0)[0] == 3
+    assert c.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# elastic plane vs the fixed-iteration batched oracle
+# ---------------------------------------------------------------------------
+def test_elastic_tol_zero_matches_batched_exactly():
+    curve, sweeps = _elastic_curve(0.0)
+    batched = NMFkBatchPlane(
+        _fixture(), KEY, n_perturbs=FIT["n_perturbs"],
+        nmf_iters=FIT["nmf_iters"], k_pad=FIT["k_pad"],
+    )
+    np.testing.assert_allclose(
+        np.asarray(curve), np.asarray(batched.evaluate_batch(KS)), atol=1e-6,
+        err_msg="tol=0 elastic fits must be draw-for-draw the batched fits",
+    )
+    assert sweeps == len(KS) * FIT["n_perturbs"] * FIT["nmf_iters"]
+
+
+TOL_LADDER = [3e-2, 3e-3, 1e-3, 1e-4, 1e-6, 0.0]
+
+
+@settings(max_examples=15, deadline=None)
+@given(i=st.integers(min_value=0, max_value=len(TOL_LADDER) - 2))
+def test_tightening_tol_converges_to_fixed_iteration_oracle(i):
+    """Property: along a descending tol ladder, scores approach the tol=0
+    oracle monotonically while sweeps run monotonically grow — the gate can
+    only fire earlier at a looser tol."""
+    oracle = np.asarray(_elastic_curve(0.0)[0])
+    loose, tight = TOL_LADDER[i], TOL_LADDER[i + 1]
+    c_loose, sw_loose = _elastic_curve(loose)
+    c_tight, sw_tight = _elastic_curve(tight)
+    dev_loose = float(np.max(np.abs(np.asarray(c_loose) - oracle)))
+    dev_tight = float(np.max(np.abs(np.asarray(c_tight) - oracle)))
+    assert sw_tight >= sw_loose
+    assert dev_tight <= dev_loose + 1e-7
+
+
+def test_elastic_search_matches_batched_search_and_accounting():
+    v = _fixture()
+    mk = dict(n_perturbs=3, nmf_iters=45, k_pad=6)
+    plane = NMFkElasticPlane(v, KEY, tol=0.0, chunk=15, warm_start=False, **mk)
+    res = ElasticWavefrontScheduler(make_space((2, 6), 0.8)).run(plane)
+    batched = NMFkBatchPlane(v, KEY, **mk)
+    ref = {k: s for k, s in zip(res.visited_ks, batched.evaluate_batch(res.visited_ks))}
+    got = {rec.k: rec.score for rec in res.visits}
+    assert res.k_optimal == 4
+    for k in got:
+        assert abs(got[k] - ref[k]) < 1e-6, f"k={k}: {got[k]} vs {ref[k]}"
+    # the bench invariant holds over the whole search, evictions included
+    assert plane.sweeps_run + plane.sweeps_saved == plane.sweeps_fixed_total
+    assert len(res.visits) + (res.n_candidates - res.n_visited) == res.n_candidates
+
+
+def test_elastic_api_executor_and_warm_start_agree_on_k_opt():
+    v = _fixture()
+    plane = NMFkElasticPlane(
+        v, KEY, n_perturbs=3, nmf_iters=45, k_pad=6, tol=1e-4, chunk=15,
+        warm_start=True,
+    )
+    res = binary_bleed_search(plane, (2, 6), 0.8, executor="elastic")
+    assert res.k_optimal == 4
+    assert plane.warm_cache.hits > 0  # refilled lanes actually warm-started
+    assert plane.sweeps_run + plane.sweeps_saved == plane.sweeps_fixed_total
+
+
+def test_elastic_cancel_evicts_inflight_and_credits_saved():
+    v = _fixture()
+    plane = NMFkElasticPlane(
+        v, KEY, n_perturbs=3, nmf_iters=45, k_pad=6, tol=0.0, chunk=15,
+        warm_start=False,
+    )
+    plane.submit(4)
+    plane.submit(5)
+    plane.tick()  # one chunk in flight for both ks
+    assert plane.inflight_ks() == {4, 5}
+    assert plane.cancel(5)
+    assert plane.inflight_ks() == {4}
+    assert plane.sweeps_saved > 0  # 5's unspent sweeps were credited
+    assert not plane.cancel(5)  # idempotent: already gone
+    scores = _drain(plane)
+    assert set(scores) == {4}
+    assert plane.sweeps_run + plane.sweeps_saved == plane.sweeps_fixed_total
+
+
+def test_refill_policy_admits_up_to_backlog_cap():
+    class FakePlane:
+        slots = 4
+        backlog = 0
+
+    pol = LaneRefillPolicy(order="pre", max_backlog=2)
+    p = FakePlane()
+    assert pol.admit(p)
+    p.backlog = 2
+    assert not pol.admit(p)
+    # default cap falls back to the plane's slot count
+    assert LaneRefillPolicy().admit(p)
+    # the candidate stream is exactly the pre-order traversal worklist
+    assert sorted(pol.worklist([2, 3, 4, 5])) == [2, 3, 4, 5]
+    assert pol.worklist([2, 3, 4, 5])[0] not in (2, 5)  # midpoint-first
+
+
+# ---------------------------------------------------------------------------
+# §III-D abort: chunk-boundary polling through the batch planes
+# ---------------------------------------------------------------------------
+def test_nmfk_chunked_scalar_matches_fused_when_never_aborted():
+    v = _fixture()
+    plane = NMFkBatchPlane(v, KEY, n_perturbs=3, nmf_iters=45, k_pad=6)
+    got = plane.evaluate_one(4, should_abort=lambda: False)
+    want = plane.evaluate_batch([4])[0]
+    assert abs(got - want) < 1e-6
+    assert plane.last_scalar_sweeps == 3 * 45
+
+
+def test_nmfk_pruned_k_stops_consuming_sweeps():
+    """Regression: the batched planes used to drop ``should_abort`` on the
+    floor, so a §III-D prune still paid the full fit. Now the scalar path
+    is chunked and the abort lands at the next chunk boundary."""
+    v = _fixture()
+    plane = NMFkBatchPlane(v, KEY, n_perturbs=3, nmf_iters=75, k_pad=6)
+    polls = []
+
+    def abort_after_first_chunk():
+        polls.append(True)
+        return len(polls) > 1
+
+    score = plane.evaluate_one(4, should_abort=abort_after_first_chunk)
+    # one chunk (abort_chunk sweeps x P lanes) ran, the remaining two never did
+    assert plane.last_scalar_sweeps == plane.abort_chunk * 3
+    assert plane.last_scalar_sweeps < 75 * 3
+    # partial ensemble still scores (accounting only — the k was pruned)
+    assert np.isfinite(score)
+
+
+def test_nmfk_abort_before_first_chunk_is_void_score():
+    v = _fixture()
+    plane = NMFkBatchPlane(v, KEY, n_perturbs=2, nmf_iters=45, k_pad=6)
+    score = plane.evaluate_one(4, should_abort=lambda: True)
+    assert np.isnan(score)
+    assert plane.last_scalar_sweeps == 0
+    # NaN is void: neither threshold test selects it, bounds are untouched
+    space = make_space((2, 6), 0.8, stop_threshold=0.1)
+    assert not space.selects(score) and not space.stops(score)
+
+
+def test_kmeans_chunked_scalar_abort():
+    x, _ = blob_data(jax.random.fold_in(KEY, 3), n=120, d=4, k_true=4)
+    plane = KMeansBatchPlane(x, KEY, score="silhouette", max_iters=25, k_pad=8)
+    got = plane.evaluate_one(4, should_abort=lambda: False)
+    want = plane.evaluate_batch([4])[0]
+    assert abs(got - want) < 1e-5
+    assert np.isnan(plane.evaluate_one(4, should_abort=lambda: True))
+
+
+def test_batch_only_adapter_polls_abort_before_dispatch():
+    calls = []
+
+    class BatchOnly:
+        def evaluate_batch(self, ks):
+            calls.append(list(ks))
+            return [1.0 for _ in ks]
+
+    plane = as_eval_plane(BatchOnly())
+    assert np.isnan(plane.evaluate_one(5, should_abort=lambda: True))
+    assert calls == []  # pruned-while-queued k never paid for its fit
+    assert plane.evaluate_one(5, should_abort=lambda: False) == 1.0
+    assert calls == [[5]]
